@@ -1,0 +1,52 @@
+"""Figure 3 — hyperparameter sensitivity: Recall@10 vs cluster count k,
+admission probability u, relevance threshold α, counter capacity B."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import evaluate_method, make_stream
+from repro.core import baselines as B
+from repro.configs.streaming_rag import paper_pipeline_config
+
+DIM = 64
+
+
+def _eval(cfg, n_batches, batch, seed=3):
+    method = B.make_streaming_rag(cfg)
+    return evaluate_method(method, make_stream("nyt", dim=DIM, seed=seed),
+                           n_batches=n_batches, batch=batch,
+                           n_query_rounds=4)
+
+
+def run(n_batches: int = 20, batch: int = 128) -> list[dict]:
+    rows = []
+    for k in [50, 100, 150, 300]:
+        cfg = paper_pipeline_config(dim=DIM, k=k, capacity=min(100, k),
+                                    update_interval=256, alpha=0.1)
+        r = _eval(cfg, n_batches, batch)
+        rows.append({"table": "fig3", "param": "k", "value": k,
+                     "recall10": round(r.recall10, 4)})
+    for u in [0.01, 0.05, 0.2, 1.0]:
+        cfg = paper_pipeline_config(dim=DIM, k=150, capacity=100,
+                                    admit_prob=u, update_interval=256, alpha=0.1)
+        r = _eval(cfg, n_batches, batch)
+        rows.append({"table": "fig3", "param": "u", "value": u,
+                     "recall10": round(r.recall10, 4)})
+    for alpha in [-1.0, 0.0, 0.1, 0.2]:
+        cfg = paper_pipeline_config(dim=DIM, k=150, capacity=100,
+                                    alpha=alpha, update_interval=256)
+        r = _eval(cfg, n_batches, batch)
+        rows.append({"table": "fig3", "param": "alpha", "value": alpha,
+                     "recall10": round(r.recall10, 4)})
+    for cap in [25, 50, 100, 150]:
+        cfg = paper_pipeline_config(dim=DIM, k=150, capacity=cap,
+                                    update_interval=256, alpha=0.1)
+        r = _eval(cfg, n_batches, batch)
+        rows.append({"table": "fig3", "param": "B", "value": cap,
+                     "recall10": round(r.recall10, 4)})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,82 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark runner: executes every per-table module, writes one CSV row
+per (table, configuration) as ``name,us_per_call,derived`` where
+us_per_call is the per-document ingest cost and ``derived`` carries the
+table's headline metric. Full rows also land in benchmarks/results/*.csv.
+"""
+from __future__ import annotations
+
+import os
+import time
+import traceback
+
+from benchmarks.common import write_csv
+
+FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+
+
+def _tables():
+    from benchmarks import (fig3_hyperparams, table3_accuracy_memory,
+                            table4_latency_throughput, table5_cross_stream,
+                            table6_memory_sweep, table7_basis_ablation,
+                            table8_eviction_ablation,
+                            table9_adaptive_ablation,
+                            table10_11_pca_sensitivity,
+                            table12_component_ablation, table13_downstream)
+    scale = 0.5 if FAST else 1.0
+
+    def n(x):
+        return max(6, int(x * scale))
+
+    return [
+        ("table3", lambda: table3_accuracy_memory.run(n_batches=n(40))),
+        ("table4", lambda: table4_latency_throughput.run(n_batches=n(30))),
+        ("table5", lambda: table5_cross_stream.run(n_batches=n(30))),
+        ("table6", lambda: table6_memory_sweep.run(n_batches=n(20))),
+        ("table7", lambda: table7_basis_ablation.run(n_batches=n(30))),
+        ("table8", lambda: table8_eviction_ablation.run(n_batches=n(30))),
+        ("table9", lambda: table9_adaptive_ablation.run(n_batches=n(30))),
+        ("table10_11", lambda: table10_11_pca_sensitivity.run(n_batches=n(24))),
+        ("table12", lambda: table12_component_ablation.run(n_batches=n(30))),
+        ("table13", lambda: table13_downstream.run(n_batches=n(40))),
+        ("fig3", lambda: fig3_hyperparams.run(n_batches=n(20))),
+    ]
+
+
+def _headline(row: dict) -> tuple[str, float, float]:
+    name_parts = [str(row.get(k)) for k in
+                  ("method", "stream", "basis", "strategy", "policy",
+                   "variant", "param", "budget_mb", "window_W", "interval_T",
+                   "value")
+                  if row.get(k) is not None]
+    name = f"{row['table']}/" + "-".join(name_parts or ["_"])
+    us = 1000.0 * float(row.get("ingest_latency_ms", 0.0) or 0.0)
+    for key in ("recall10", "EM", "throughput_dps"):
+        if key in row:
+            return name, us, float(row[key])
+    return name, us, 0.0
+
+
+def main() -> None:
+    os.makedirs("benchmarks/results", exist_ok=True)
+    all_rows = []
+    print("name,us_per_call,derived")
+    for tname, fn in _tables():
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception:
+            traceback.print_exc()
+            print(f"{tname}/ERROR,0,0")
+            continue
+        all_rows.extend(rows)
+        write_csv(f"benchmarks/results/{tname}.csv", rows)
+        for row in rows:
+            name, us, derived = _headline(row)
+            print(f"{name},{us:.1f},{derived}")
+        print(f"# {tname} done in {time.time()-t0:.1f}s", flush=True)
+    write_csv("benchmarks/results/all.csv", all_rows)
+
+
+if __name__ == "__main__":
+    main()

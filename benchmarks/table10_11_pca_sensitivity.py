@@ -1,0 +1,44 @@
+"""Tables 10–11 — adaptive-basis sensitivity: PCA window length W and
+basis update interval T (adaptive basis on the drifting twitter stream)."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import evaluate_method, make_stream
+from repro.core import baselines as B
+from repro.configs.streaming_rag import paper_pipeline_config
+
+DIM = 64
+
+
+def _eval(cfg, n_batches, batch):
+    method = B.make_streaming_rag(cfg)
+    return evaluate_method(method, make_stream("twitter", dim=DIM),
+                           n_batches=n_batches, batch=batch,
+                           n_query_rounds=5)
+
+
+def run(n_batches: int = 24, batch: int = 128) -> list[dict]:
+    rows = []
+    base = paper_pipeline_config(dim=DIM, k=150, capacity=100,
+                                 basis="adaptive", update_interval=256, alpha=0.1)
+    for W in [256, 512, 1024]:
+        cfg = dataclasses.replace(
+            base, pre=dataclasses.replace(base.pre, window=W))
+        r = _eval(cfg, n_batches, batch)
+        rows.append({"table": "table10", "window_W": W,
+                     "recall10": round(r.recall10, 4),
+                     "ingest_latency_ms": round(r.ingest_latency_ms, 3)})
+    for T in [256, 512, 1024]:
+        cfg = dataclasses.replace(
+            base, pre=dataclasses.replace(base.pre, update_interval=T))
+        r = _eval(cfg, n_batches, batch)
+        rows.append({"table": "table11", "interval_T": T,
+                     "recall10": round(r.recall10, 4),
+                     "ingest_latency_ms": round(r.ingest_latency_ms, 3)})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

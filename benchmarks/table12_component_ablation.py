@@ -1,0 +1,72 @@
+"""Table 12 — component ablation on the NYT stream:
+full pipeline / no pre-filtering / no clustering / no dynamic reconstruction.
+
+'No dynamic reconstruction' disables the incremental upsert: the index must
+be rebuilt from the live prototypes at *query* time (the paper's 3× query
+latency without the incremental path)."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import evaluate_method, make_stream
+from repro.core import baselines as B, heavy_hitter, index as index_lib, pipeline
+from repro.configs.streaming_rag import paper_pipeline_config
+
+DIM = 64
+
+
+def _no_recon_method(cfg: pipeline.PipelineConfig) -> B.Method:
+    """Index never upserted during ingest; rebuilt synchronously per query."""
+    cfg = dataclasses.replace(cfg, update_interval=1 << 30)
+
+    def init(key, warmup=None):
+        return pipeline.init(cfg, key, warmup)
+
+    def ingest(s, x, ids):
+        s2, _ = pipeline.ingest_batch(cfg, s, x, ids)
+        return s2
+
+    def query(s, q, k_):
+        import jax.numpy as jnp
+        slots = jnp.arange(cfg.hh.bmax(), dtype=jnp.int32)
+        lbl = jnp.maximum(s.hh.labels, 0)
+        idx = index_lib.upsert(cfg.index, s.index, slots,
+                               s.clus.centroids[lbl], s.rep_ids[lbl],
+                               heavy_hitter.active_mask(s.hh))
+        return index_lib.search(cfg.index, idx, q, k_)
+
+    return B.Method("no_dynamic_recon", init, ingest, query,
+                    lambda: pipeline.state_memory_bytes(cfg))
+
+
+def variants():
+    base = paper_pipeline_config(dim=DIM, k=150, capacity=100,
+                                 update_interval=256, alpha=0.1)
+    no_pre = dataclasses.replace(
+        base, pre=dataclasses.replace(base.pre, alpha=-1.0))  # keep all
+    no_clus = dataclasses.replace(
+        base, clus=dataclasses.replace(base.clus, update_mode="frozen"))
+    return [
+        ("full_pipeline", B.make_streaming_rag(base)),
+        ("no_prefilter", B.make_streaming_rag(no_pre)),
+        ("no_clustering", B.make_streaming_rag(no_clus)),
+        ("no_dynamic_recon", _no_recon_method(base)),
+    ]
+
+
+def run(n_batches: int = 30, batch: int = 128) -> list[dict]:
+    rows = []
+    for name, method in variants():
+        r = evaluate_method(method, make_stream("nyt", dim=DIM),
+                            n_batches=n_batches, batch=batch)
+        rows.append({"table": "table12", "variant": name,
+                     "recall10": round(r.recall10, 4),
+                     "query_latency_ms": round(r.query_latency_ms, 3),
+                     "ingest_latency_ms": round(r.ingest_latency_ms, 3),
+                     "throughput_dps": round(r.throughput_dps, 1)})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,36 @@
+"""Table 3 — Recall@10 / nDCG@10 under a memory budget (NYT stream),
+seven methods. Streaming RAG must beat the compact baselines and the stale
+static index (paired t-test p-values vs Streaming RAG included)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (default_methods, evaluate_method, make_stream,
+                               paired_t)
+
+DIM = 64
+
+
+def run(n_batches: int = 40, batch: int = 128, seed: int = 0) -> list[dict]:
+    rows = []
+    results = {}
+    for method in default_methods(DIM):
+        stream = make_stream("nyt", dim=DIM, seed=seed)  # same stream replay
+        r = evaluate_method(method, stream, n_batches=n_batches, batch=batch,
+                            seed=seed)
+        results[method.name] = r
+        rows.append({"table": "table3", **r.row()})
+    ours = np.array(results["streaming_rag"].extras["recall_rounds"])
+    for name, r in results.items():
+        if name == "streaming_rag":
+            continue
+        t, p = paired_t(ours, np.array(r.extras["recall_rounds"]))
+        for row in rows:
+            if row["method"] == name:
+                row["p_vs_ours"] = round(p, 4)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,31 @@
+"""Table 4 — end-to-end latency (ms) and ingest throughput (docs/s).
+
+Wall-clock on the CPU container (the paper's RTX-4090 absolute numbers are
+not reproducible offline; the method ORDERING is the reproduction target —
+TPU-pod projections live in EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+from benchmarks.common import default_methods, evaluate_method, make_stream
+
+DIM = 64
+
+
+def run(n_batches: int = 30, batch: int = 256, seed: int = 1) -> list[dict]:
+    rows = []
+    for method in default_methods(DIM):
+        stream = make_stream("synthetic", dim=DIM, seed=seed)
+        r = evaluate_method(method, stream, n_batches=n_batches, batch=batch,
+                            n_query_rounds=5, seed=seed)
+        rows.append({
+            "table": "table4", "method": r.method,
+            "ingest_latency_ms": round(r.ingest_latency_ms, 3),
+            "query_latency_ms": round(r.query_latency_ms, 3),
+            "throughput_dps": round(r.throughput_dps, 1),
+            "memory_mb": round(r.memory_mb, 2),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

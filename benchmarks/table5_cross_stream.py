@@ -1,0 +1,31 @@
+"""Table 5 — Streaming RAG Recall@10 across the eight simulated streams."""
+from __future__ import annotations
+
+from benchmarks.common import evaluate_method, make_stream
+from repro.core import baselines as B
+from repro.configs.streaming_rag import paper_pipeline_config
+
+DIM = 64
+STREAMS = ["nyt", "synthetic", "twitter", "iot", "reddit", "wikimedia",
+           "nasdaq", "btc"]
+
+
+def run(n_batches: int = 30, batch: int = 128) -> list[dict]:
+    rows = []
+    for name in STREAMS:
+        cfg = paper_pipeline_config(dim=DIM, k=150, capacity=100,
+                                    update_interval=256, alpha=0.1)
+        method = B.make_streaming_rag(cfg)
+        r = evaluate_method(method, make_stream(name, dim=DIM),
+                            n_batches=n_batches, batch=batch)
+        rows.append({"table": "table5", "stream": name,
+                     "recall10": round(r.recall10, 4),
+                     "recall10_std": round(r.recall10_std, 4),
+                     "ndcg10": round(r.ndcg10, 4),
+                     "throughput_dps": round(r.throughput_dps, 1)})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

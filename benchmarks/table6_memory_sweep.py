@@ -1,0 +1,35 @@
+"""Table 6 / Figure 2 — recall/latency vs memory budget.
+
+Budgets are scaled to the bench corpus (the paper's 50–200 MB assumes the
+full NYT archive; the budget→(k, B) mapping is identical)."""
+from __future__ import annotations
+
+from benchmarks.common import evaluate_method, make_stream
+from repro.core import baselines as B
+from repro.core.pipeline import budget_to_config, state_memory_bytes
+
+DIM = 384
+BUDGETS_MB = [0.5, 1.0, 2.0, 4.0]
+
+
+def run(n_batches: int = 20, batch: int = 128) -> list[dict]:
+    rows = []
+    for mb in BUDGETS_MB:
+        cfg = budget_to_config(mb, dim=DIM)
+        method = B.make_streaming_rag(cfg)
+        r = evaluate_method(method, make_stream("nyt", dim=DIM),
+                            n_batches=n_batches, batch=batch,
+                            n_query_rounds=5)
+        rows.append({"table": "table6", "budget_mb": mb,
+                     "k_clusters": cfg.clus.num_clusters,
+                     "hh_capacity": cfg.hh.capacity,
+                     "actual_state_mb": round(state_memory_bytes(cfg) / 1e6, 3),
+                     "recall10": round(r.recall10, 4),
+                     "query_latency_ms": round(r.query_latency_ms, 3),
+                     "ingest_latency_ms": round(r.ingest_latency_ms, 3)})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,30 @@
+"""Table 7 — pre-filtering basis ablation: fixed orthogonal vs random
+orthonormal vs adaptive PCA, under thematic drift (twitter stream)."""
+from __future__ import annotations
+
+from benchmarks.common import evaluate_method, make_stream
+from repro.core import baselines as B
+from repro.configs.streaming_rag import paper_pipeline_config
+
+
+DIM = 64
+
+
+def run(n_batches: int = 30, batch: int = 128) -> list[dict]:
+    rows = []
+    for basis in ["fixed", "random", "adaptive"]:
+        cfg = paper_pipeline_config(dim=DIM, k=150, capacity=100, basis=basis,
+                                    update_interval=256, alpha=0.1)
+        method = B.make_streaming_rag(cfg)
+        r = evaluate_method(method, make_stream("twitter", dim=DIM),
+                            n_batches=n_batches, batch=batch)
+        rows.append({"table": "table7", "basis": basis,
+                     "recall10": round(r.recall10, 4),
+                     "recall10_std": round(r.recall10_std, 4),
+                     "ingest_latency_ms": round(r.ingest_latency_ms, 3)})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

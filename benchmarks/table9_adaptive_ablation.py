@@ -1,0 +1,30 @@
+"""Table 9 — static (u, B) vs adaptive (u_t, B_t) under the bursty
+NYT+Twitter mixed stream."""
+from __future__ import annotations
+
+from benchmarks.common import evaluate_method
+from repro.core import baselines as B
+from repro.data.streams import mixed_stream
+from repro.configs.streaming_rag import paper_pipeline_config
+
+DIM = 64
+
+
+def run(n_batches: int = 30, batch: int = 128) -> list[dict]:
+    rows = []
+    for name, adaptive in [("static", False), ("adaptive_u_B", True)]:
+        cfg = paper_pipeline_config(dim=DIM, k=150, capacity=64,
+                                    adaptive=adaptive, update_interval=256, alpha=0.1)
+        method = B.make_streaming_rag(cfg)
+        r = evaluate_method(method, mixed_stream(["nyt", "twitter"], dim=DIM),
+                            n_batches=n_batches, batch=batch)
+        rows.append({"table": "table9", "policy": name,
+                     "recall10": round(r.recall10, 4),
+                     "recall10_std": round(r.recall10_std, 4),
+                     "ingest_latency_ms": round(r.ingest_latency_ms, 3)})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,47 @@
+"""Quickstart: build a Streaming-RAG pipeline, ingest a live stream,
+query it, and watch the index stay fresh under a memory budget.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.streaming_rag import paper_pipeline_config
+from repro.core import heavy_hitter, pipeline
+from repro.data.streams import make_stream
+
+DIM = 64
+
+# 1. A drifting, bursty news-like stream (latent topics = ground truth).
+stream = make_stream("nyt", dim=DIM)
+warm = np.concatenate([stream.next_batch(256)["embedding"] for _ in range(2)])
+
+# 2. The paper's pipeline (Table 2 defaults; alpha calibrated to the
+#    synthetic embedding geometry — see EXPERIMENTS.md).
+cfg = paper_pipeline_config(dim=DIM, k=150, capacity=100,
+                            update_interval=256, alpha=0.1)
+state = pipeline.init(cfg, jax.random.key(0), warmup=jnp.asarray(warm))
+print(f"state memory budget: {pipeline.state_memory_bytes(cfg)/1e6:.2f} MB")
+
+# 3. Ingest 5,000 documents (jit-compiled batched steps).
+for _ in range(20):
+    b = stream.next_batch(256)
+    state, info = pipeline.ingest_batch(
+        cfg, state, jnp.asarray(b["embedding"]), jnp.asarray(b["doc_id"]))
+
+print(f"arrivals={int(state.arrivals)}  kept={int(state.kept)} "
+      f"({100*int(state.kept)/int(state.arrivals):.0f}% passed screening)")
+print(f"active clusters={int(jnp.sum(heavy_hitter.active_mask(state.hh)))} "
+      f"(counter capacity {cfg.hh.capacity})")
+print(f"index refreshes={int(state.upserts)}  "
+      f"counter writes={int(state.hh.total_writes)}")
+
+# 4. Query the live prototype index.
+qs = stream.queries(5)
+scores, rows, doc_ids, clusters = pipeline.query(
+    cfg, state, jnp.asarray(qs["embedding"]), k=5)
+for i in range(5):
+    print(f"query topic {qs['topic'][i]:>3}: "
+          f"retrieved docs {np.asarray(doc_ids[i]).tolist()} "
+          f"(cos {np.asarray(scores[i]).round(3).tolist()})")

@@ -1,0 +1,372 @@
+"""Loop-aware cost model over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts every computation ONCE — a
+``lax.scan`` over 61 layers or 16 microbatches under-reports flops/bytes/
+collective traffic by the trip count. This module re-derives the three
+roofline inputs by walking the HLO computation graph and multiplying
+``while`` bodies by their trip counts:
+
+  flops            — dot/convolution/custom-matmul ops (2·M·N·K)
+  hbm bytes        — per top-level instruction: operand + result bytes
+                     (fusion interiors don't touch HBM; fusion params and
+                     results do — mirrors XLA's own accounting)
+  collective bytes — result bytes of all-gather / all-reduce /
+                     reduce-scatter / all-to-all / collective-permute
+
+Trip counts are recovered from each while condition's compare-against-
+constant (the lax.scan lowering); unrecognized conditions default to 1
+(conservative).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+
+
+def _parse_instr_line(line: str):
+    """Parse `  %name = <shape> opcode(operands), attrs` with balanced-paren
+    shape scanning (tuple shapes embed comments and S(n) memory spaces)."""
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    i = m.end()
+    n = len(line)
+    if i < n and line[i] == "(":  # tuple shape: scan to balanced close
+        depth = 0
+        j = i
+        while j < n:
+            if line[j] == "(":
+                depth += 1
+            elif line[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        shape = line[i:j + 1]
+        i = j + 1
+    else:  # simple shape token
+        j = line.find(" ", i)
+        if j < 0:
+            return None
+        shape = line[i:j]
+        i = j
+    while i < n and line[i] == " ":
+        i += 1
+    j = i
+    while j < n and (line[j].isalnum() or line[j] in "-_"):
+        j += 1
+    opcode = line[i:j]
+    if j >= n or line[j] != "(" or not opcode:
+        return None
+    return Instr(name=name, shape=shape, opcode=opcode, rest=line[j + 1:])
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _dims(dim_str: str) -> list[int]:
+    return [int(d) for d in dim_str.split(",") if d] if dim_str else []
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt in _DTYPE_BYTES:
+            n = 1
+            for d in _dims(dims):
+                n *= d
+            total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(shape_str: str) -> int:
+    n_total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt in _DTYPE_BYTES:
+            n = 1
+            for d in _dims(dims):
+                n *= d
+            n_total += n
+    return n_total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str          # result shape string
+    opcode: str
+    rest: str           # operand list + attributes (raw)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+    is_entry: bool = False
+
+
+def parse_module(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in hlo.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" "):  # computation header or module line
+            m = _COMP_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(1), [],
+                                  is_entry=line.startswith("ENTRY"))
+                comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        instr = _parse_instr_line(line)
+        if instr is not None:
+            cur.instrs.append(instr)
+    return comps
+
+
+def _called(rest: str, key: str) -> str | None:
+    m = re.search(key + r"=%?([\w.\-]+)", rest)
+    return m.group(1) if m else None
+
+
+def _operand_names(rest: str) -> list[str]:
+    # rest starts right after the opcode's '(' — operands end at the
+    # matching close (depth -1)
+    depth, cur = 0, []
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        cur.append(ch)
+    names = []
+    for a in "".join(cur).split(","):
+        m = re.match(r"%?([\w.\-]+)", a.strip())
+        if m:
+            names.append(m.group(1))
+    return names
+
+
+def _dot_flops(instr: Instr, shapes: dict[str, str]) -> float:
+    """2 × prod(result) × prod(contracting dims of lhs)."""
+    out_elems = shape_elems(instr.shape)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rest)
+    ops = _operand_names(instr.rest)
+    if not ops:
+        return 0.0
+    lhs_shape = shapes.get(ops[0], "")
+    lhs_dims = _dims(_SHAPE_RE.search(lhs_shape).group(2)) if \
+        _SHAPE_RE.search(lhs_shape) else []
+    k = 1
+    if m and lhs_dims:
+        for d in _dims(m.group(1)):
+            if d < len(lhs_dims):
+                k *= lhs_dims[d]
+    return 2.0 * out_elems * k
+
+
+def _customcall_matmul_flops(instr: Instr, shapes: dict[str, str]) -> float:
+    """oneDNN / Eigen matmul custom-calls: 2·prod(result)·K with K inferred
+    as the lhs dim missing from the result."""
+    ops = _operand_names(instr.rest)
+    if not ops:
+        return 0.0
+    lhs = shapes.get(ops[0], "")
+    lm = _SHAPE_RE.search(lhs)
+    rm = _SHAPE_RE.search(instr.shape)
+    if not (lm and rm):
+        return 0.0
+    lhs_dims, out_dims = _dims(lm.group(2)), _dims(rm.group(2))
+    k = lhs_dims[-1] if lhs_dims else 1
+    out = 1
+    for d in out_dims:
+        out *= d
+    return 2.0 * out * k
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_counts: dict = dataclasses.field(default_factory=dict)
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k, self.collective_bytes * k,
+                    {kk: vv * k for kk, vv in self.collective_counts.items()})
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.collective_bytes += o.collective_bytes
+        for k, v in o.collective_counts.items():
+            self.collective_counts[k] = self.collective_counts.get(k, 0) + v
+        return self
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps = parse_module(hlo_text)
+        self.shapes: dict[str, dict[str, str]] = {
+            cname: {i.name: i.shape for i in c.instrs}
+            for cname, c in self.comps.items()}
+        self._memo: dict[tuple[str, bool], Cost] = {}
+
+    # -- trip counts -----------------------------------------------------------
+    def trip_count(self, cond_name: str) -> int:
+        comp = self.comps.get(cond_name)
+        if comp is None:
+            return 1
+        best = 1
+        for i in comp.instrs:
+            if i.opcode == "constant":
+                m = re.search(r"constant\((\d+)\)", "constant(" + i.rest)
+                if m:
+                    best = max(best, int(m.group(1)))
+        return best
+
+    # -- recursive cost ---------------------------------------------------------
+    def cost_of(self, comp_name: str, count_bytes: bool) -> Cost:
+        key = (comp_name, count_bytes)
+        if key in self._memo:
+            return self._memo[key]
+        self._memo[key] = Cost()  # cycle guard
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return Cost()
+        total = Cost()
+        shapes = self.shapes[comp_name]
+        for i in comp.instrs:
+            total += self.instr_cost(i, shapes, count_bytes)
+        self._memo[key] = total
+        return total
+
+    def instr_cost(self, i: Instr, shapes, count_bytes: bool) -> Cost:
+        c = Cost()
+        op = i.opcode
+        if op == "while":
+            body = _called(i.rest, "body")
+            cond = _called(i.rest, "condition")
+            trips = self.trip_count(cond) if cond else 1
+            inner = self.cost_of(body, count_bytes=True) if body else Cost()
+            return inner.scaled(trips)
+        if op == "conditional":
+            out = Cost()  # sum of branches = upper bound
+            for br in re.findall(r"(?:true_computation|false_computation)"
+                                 r"=%?([\w.\-]+)", i.rest):
+                out += self.cost_of(br, count_bytes=True)
+            return out
+        if op in ("fusion", "call", "map", "reduce", "reduce-window", "sort",
+                  "scatter", "select-and-scatter"):
+            called = _called(i.rest, "calls") or _called(i.rest, "to_apply")
+            if called:
+                # flops from the interior; bytes only at the boundary
+                inner = self.cost_of(called, count_bytes=False)
+                c.flops += inner.flops
+                c.collective_bytes += inner.collective_bytes
+                for k, v in inner.collective_counts.items():
+                    c.collective_counts[k] = c.collective_counts.get(k, 0) + v
+            if count_bytes:
+                c.bytes += self._boundary_bytes(i, shapes)
+            return c
+        if op == "dot":
+            c.flops += _dot_flops(i, shapes)
+        elif op == "custom-call" and re.search(r"matmul|gemm|dot",
+                                               i.rest[:160], re.I):
+            c.flops += _customcall_matmul_flops(i, shapes)
+        elif op == "convolution":
+            # flops ≈ 2 × out_elems × (K window × in_channels) — rough
+            c.flops += 2.0 * shape_elems(i.shape) * 1.0
+        base = op.split(".")[0]
+        for coll in COLLECTIVES:
+            if base == coll or base == coll + "-start":
+                b = shape_bytes(i.shape)
+                c.collective_bytes += b
+                c.collective_counts[coll] = c.collective_counts.get(coll, 0) + 1
+        if count_bytes and op not in ("parameter", "constant",
+                                      "get-tuple-element", "tuple", "while",
+                                      "bitcast"):
+            c.bytes += self._boundary_bytes(i, shapes)
+        return c
+
+    def _boundary_bytes(self, i: Instr, shapes) -> float:
+        b = shape_bytes(i.shape)
+        for name in _operand_names(i.rest):
+            if name in shapes:
+                b += shape_bytes(shapes[name])
+        return float(b)
+
+    def entry_cost(self) -> Cost:
+        for name, comp in self.comps.items():
+            if comp.is_entry:
+                return self.cost_of(name, count_bytes=True)
+        # fallback: largest computation
+        name = max(self.comps, key=lambda n: len(self.comps[n].instrs))
+        return self.cost_of(name, count_bytes=True)
+
+
+def analyze(hlo_text: str) -> dict:
+    model = HloCostModel(hlo_text)
+    cost = model.entry_cost()
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "collective_bytes": cost.collective_bytes,
+        "collective_counts": cost.collective_counts,
+    }
+
+
+def bytes_breakdown(hlo_text: str, top: int = 15) -> list[tuple[str, float]]:
+    """Attribute HBM bytes to (opcode, result-shape) pairs, trip-count-
+    scaled — the profiler substitute for the hypothesis loop (§Perf)."""
+    model = HloCostModel(hlo_text)
+
+    # compute per-computation trip multipliers by walking whiles from entry
+    mult: dict[str, float] = {}
+
+    def walk(comp_name: str, k: float):
+        mult[comp_name] = mult.get(comp_name, 0.0) + k
+        comp = model.comps.get(comp_name)
+        if comp is None:
+            return
+        for i in comp.instrs:
+            if i.opcode == "while":
+                body = _called(i.rest, "body")
+                cond = _called(i.rest, "condition")
+                trips = model.trip_count(cond) if cond else 1
+                if body and mult.get(body, 0.0) < k * trips:
+                    walk(body, k * trips)
+
+    entry = next((n for n, c in model.comps.items() if c.is_entry), None)
+    if entry is None:
+        return []
+    walk(entry, 1.0)
+
+    agg: dict[tuple[str, str], float] = {}
+    for cname, k in mult.items():
+        comp = model.comps[cname]
+        shapes = model.shapes[cname]
+        for i in comp.instrs:
+            if i.opcode in ("parameter", "constant", "get-tuple-element",
+                            "tuple", "while", "bitcast"):
+                continue
+            b = model._boundary_bytes(i, shapes) * k
+            key = (i.opcode, i.shape.split("{")[0][:42])
+            agg[key] = agg.get(key, 0.0) + b
+    rows = sorted(agg.items(), key=lambda kv: -kv[1])[:top]
+    return [(f"{op} {shape}", b) for (op, shape), b in rows]

@@ -1,0 +1,243 @@
+"""Three-term roofline analysis from the compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+Sources: ``compiled.cost_analysis()`` (flops / bytes accessed — reported by
+XLA for the per-device SPMD module, so the formulas divide by one chip's
+peak) and the optimized HLO text for collective-op byte counts (XLA's cost
+analysis does not attribute collectives).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+# `bf16[256,4096,128]{2,1,0}` or tuple results `(f32[8,128], u32[])`
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum result bytes of every collective op in optimized HLO, by type.
+
+    Per-device accounting: the SPMD module's collective result shapes are
+    already the per-device buffer sizes.
+    """
+    out = {op: {"bytes": 0, "count": 0} for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match '%name = <shape(s)> <op>(' — ignore metadata mentions
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)", s)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        base = op.split(".")[0]
+        # normalize e.g. 'all-reduce-start', 'all-gather-done'
+        for coll in COLLECTIVE_OPS:
+            if base == coll or base == coll + "-start":
+                out[coll]["bytes"] += _shape_bytes(shape_str)
+                out[coll]["count"] += 1
+                break
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float          # HLO flops (per-device module)
+    bytes_per_chip: float          # HLO bytes accessed
+    collective_bytes_per_chip: float
+    collectives: dict
+    model_flops: float             # 6·N_active·D (global, analytic)
+    memory_per_chip: float | None  # from memory_analysis (if available)
+    compile_seconds: float
+
+    @property
+    def compute_term(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def memory_term(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def collective_term(self) -> float:
+        return self.collective_bytes_per_chip / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_term, "memory": self.memory_term,
+                 "collective": self.collective_term}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (global HLO flops) — remat/redundancy waste."""
+        total = self.flops_per_chip * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def step_time_bound(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_term, self.memory_term, self.collective_term)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable-compute fraction: compute term / max term. 1.0 means
+        compute-bound at peak; lower means memory/collective dominate."""
+        t = self.step_time_bound
+        return (self.compute_term / t) if t > 0 else 0.0
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        for k in ("compute_term", "memory_term", "collective_term",
+                  "dominant", "useful_flops_fraction", "step_time_bound",
+                  "roofline_fraction"):
+            d[k] = getattr(self, k)
+        return d
+
+
+def lm_active_params(cfg) -> float:
+    """Active (per-token) parameter count of an LMConfig, embeddings excluded."""
+    d, hd = cfg.d_model, cfg.hd
+    if cfg.mla is not None:
+        m = cfg.mla
+        attn = (d * m.q_lora_rank + m.q_lora_rank * cfg.n_heads *
+                (m.qk_nope_dim + m.qk_rope_dim)
+                + d * (m.kv_lora_rank + m.qk_rope_dim)
+                + m.kv_lora_rank * cfg.n_heads * (m.qk_nope_dim + m.v_head_dim)
+                + cfg.n_heads * m.v_head_dim * d)
+    else:
+        attn = d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd \
+            + cfg.n_heads * hd * d
+    n_moe = (cfg.n_layers - cfg.first_k_dense) if cfg.moe else 0
+    n_dense = cfg.n_layers - n_moe
+    dense_ff = cfg.dense_ff or cfg.d_ff
+    dense_mlp = 3 * d * dense_ff
+    total = n_dense * (attn + dense_mlp)
+    if cfg.moe:
+        mc = cfg.moe
+        active = (mc.top_k + mc.num_shared) * 3 * d * mc.d_ff
+        total += n_moe * (attn + active)
+    return float(total)
+
+
+def model_flops_for(arch, shape_name: str) -> float:
+    """Analytic MODEL_FLOPS: 6·N_active·D for LM training; 2·N·D serving;
+    message-passing/embedding analogues for GNN/recsys."""
+    sh = arch.shapes[shape_name]
+    dims = dict(sh.dims)
+    cfg = getattr(arch, "cfg", None)
+    from repro.models.transformer import LMConfig
+
+    if isinstance(cfg, LMConfig):
+        n_active = lm_active_params(cfg)
+        if sh.kind == "train":
+            tokens = dims["seq"] * dims["batch"]
+            f = 6.0 * n_active * tokens
+            if cfg.mtp:
+                f *= 1.0 + 1.0 / max(cfg.n_layers, 1)
+            return f
+        if sh.kind == "prefill":
+            return 2.0 * n_active * dims["seq"] * dims["batch"]
+        # decode: one token per sequence + attention over the cache
+        f = 2.0 * n_active * dims["batch"]
+        if cfg.mla is not None:
+            per_tok = cfg.n_layers * cfg.n_heads * (
+                cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim) * 2
+            f += 2.0 * per_tok * min(dims["seq"], dims["seq"]) * dims["batch"]
+        else:
+            win = cfg.window or dims["seq"]
+            kv = min(dims["seq"], win)
+            f += (2.0 * cfg.n_layers * cfg.n_heads * cfg.hd * 2
+                  * kv * dims["batch"])
+        return f
+
+    from repro.models.gnn import GNNConfig
+    if isinstance(cfg, GNNConfig):
+        h = cfg.d_hidden
+        if shape_name == "minibatch_lg":
+            n, e = dims["pad_nodes"], dims["pad_edges"]
+        elif shape_name == "molecule":
+            n = dims["n_nodes"] * dims["batch"]
+            e = dims["n_edges"] * dims["batch"]
+        else:
+            n, e = dims["n_nodes"], dims["n_edges"]
+        per_layer = e * (3 * h) * h * 2 * (cfg.mlp_layers + 1) \
+            + n * (2 * h) * h * 2 * (cfg.mlp_layers + 1)
+        fwd = cfg.n_layers * per_layer + (n * dims["d_feat"] * h
+                                          + e * cfg.d_edge_feat * h) * 2
+        return 3.0 * fwd  # fwd+bwd
+
+    # recsys: embedding gathers + interaction + MLP, per example
+    B = dims["batch"]
+    d = getattr(arch, "embed_dim", 64)
+    hist = getattr(arch, "hist_len", 0)
+    per_ex = 2.0 * hist * d * d if hist else 2.0 * 39 * d
+    if sh.kind == "train":
+        per_ex *= 3.0
+    if sh.kind == "retrieval":
+        per_ex += 2.0 * dims.get("n_candidates", 0) * d
+    return per_ex * B
+
+
+def render_markdown_table(reports: list[RooflineReport]) -> str:
+    head = ("| arch | shape | mesh | compute s | memory s | collective s | "
+            "dominant | model/HLO flops | roofline frac |\n"
+            "|---|---|---|---|---|---|---|---|---|")
+    rows = [head]
+    for r in reports:
+        rows.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.compute_term:.2e} "
+            f"| {r.memory_term:.2e} | {r.collective_term:.2e} | {r.dominant} "
+            f"| {r.useful_flops_fraction:.3f} | {r.roofline_fraction:.3f} |")
+    return "\n".join(rows)
+
+
+def load_reports(paths) -> list[RooflineReport]:
+    out = []
+    for p in paths:
+        with open(p) as f:
+            d = json.load(f)
+        d = {k: v for k, v in d.items() if k in
+             {f.name for f in dataclasses.fields(RooflineReport)}}
+        out.append(RooflineReport(**d))
+    return out

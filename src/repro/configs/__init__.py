@@ -1,0 +1,30 @@
+"""Assigned-architecture configs (one module per --arch id) + the paper's own.
+
+Importing this package registers every factory with models/api.
+"""
+from repro.configs import (  # noqa: F401
+    bert4rec,
+    deepseek_moe_16b,
+    deepseek_v3_671b,
+    dien,
+    fm,
+    h2o_danube_1_8b,
+    h2o_danube_3_4b,
+    meshgraphnet,
+    mind,
+    qwen2_1_5b,
+    streaming_rag,
+)
+
+ASSIGNED = [
+    "h2o-danube-3-4b",
+    "h2o-danube-1.8b",
+    "qwen2-1.5b",
+    "deepseek-moe-16b",
+    "deepseek-v3-671b",
+    "meshgraphnet",
+    "mind",
+    "bert4rec",
+    "dien",
+    "fm",
+]

@@ -1,0 +1,29 @@
+"""bert4rec [recsys] — embed_dim=64, 2 blocks, 2 heads, seq_len=200,
+bidirectional cloze objective. [arXiv:1904.06690; paper]
+"""
+from repro.configs.recsys_common import SMOKE_RS_SHAPES
+from repro.models.api import register
+from repro.models.recsys import BERT4Rec, BERT4RecConfig
+from repro.train.optimizer import OptimizerConfig
+
+CONFIG = BERT4RecConfig(
+    name="bert4rec",
+    embed_dim=64,
+    n_blocks=2,
+    n_heads=2,
+    seq_len=200,
+    n_items=1_000_000,
+)
+
+OPT = OptimizerConfig(kind="adamw", lr=1e-3, clip_norm=1.0)
+
+
+@register("bert4rec")
+def make(smoke: bool = False):
+    if smoke:
+        arch = BERT4Rec(BERT4RecConfig(name="bert4rec-smoke", embed_dim=16,
+                                       n_blocks=1, n_heads=2, seq_len=8,
+                                       n_items=1000), optimizer=OPT)
+        arch.shapes = dict(SMOKE_RS_SHAPES)
+        return arch
+    return BERT4Rec(CONFIG, optimizer=OPT)

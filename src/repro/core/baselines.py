@@ -1,0 +1,297 @@
+"""The paper's six comparison strategies (§Baselines), sharing one protocol:
+
+  init(key) -> state;  ingest(state, x, ids) -> state;  query(state, q, k)
+
+* Static RAG          — index built once from the warmup prefix, never updated.
+* Full Rebuild        — buffer recent docs; rebuild the whole index (fresh
+                        k-means) every refresh interval.
+* Reservoir Sampling  — Vitter's uniform reservoir of size k as the index.
+* Heap Filtering Only — heavy-hitter filter over *frozen* random-anchor
+                        labels, no clustering; index rows are each active
+                        label's best-matching document.
+* Faiss IVFPQ Incr.   — IVF+PQ index (core/index.py) with incremental adds.
+* SAKR (Kang et al.)  — single-topic-vector screening + k-means + min-heap
+                        top-B clusters (no admission randomness).
+
+All are pure-JAX pytree state machines like the main pipeline, so the same
+benchmark harness drives all seven methods.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import clustering, heavy_hitter, index as index_lib, pipeline, prefilter
+from repro.kernels.common import l2_normalize
+
+
+@dataclasses.dataclass(frozen=True)
+class Method:
+    name: str
+    init: Callable[..., Any]
+    ingest: Callable[..., Any]
+    query: Callable[..., Any]
+    memory_bytes: Callable[[], int]
+
+
+# ---------------------------------------------------------------- static RAG
+def make_static_rag(dim: int, capacity: int = 8192):
+    cfg = index_lib.IndexConfig(capacity=capacity, dim=dim)
+
+    class S(NamedTuple):
+        index: index_lib.FlatIndex
+        fill: jnp.ndarray
+        frozen: jnp.ndarray
+
+    def init(key):
+        return S(index_lib.init(cfg), jnp.int32(0), jnp.bool_(False))
+
+    @jax.jit
+    def ingest(s, x, ids):
+        # absorb only until capacity, then freeze (the "stale snapshot")
+        n = x.shape[0]
+        rows = jnp.minimum(s.fill + jnp.arange(n), cfg.capacity - 1)
+        can = (~s.frozen) & ((s.fill + jnp.arange(n)) < cfg.capacity)
+        idx = index_lib.upsert(cfg, s.index, rows.astype(jnp.int32), x, ids, can)
+        fill = jnp.minimum(s.fill + n, cfg.capacity)
+        return S(idx, fill, fill >= cfg.capacity)
+
+    def query(s, q, k):
+        return index_lib.search(cfg, s.index, q, k)
+
+    return Method("static_rag", init, ingest, query,
+                  lambda: index_lib.memory_bytes(cfg))
+
+
+# -------------------------------------------------------------- full rebuild
+def make_full_rebuild(dim: int, buffer_size: int = 2048, k: int = 100,
+                      rebuild_interval: int = 1000):
+    icfg = index_lib.IndexConfig(capacity=k, dim=dim)
+
+    class S(NamedTuple):
+        buf: jnp.ndarray
+        buf_ids: jnp.ndarray
+        ptr: jnp.ndarray
+        fill: jnp.ndarray
+        since: jnp.ndarray
+        index: index_lib.FlatIndex
+        rng: jax.Array
+
+    def init(key):
+        return S(jnp.zeros((buffer_size, dim), jnp.float32),
+                 jnp.full((buffer_size,), -1, jnp.int32),
+                 jnp.int32(0), jnp.int32(0), jnp.int32(0),
+                 index_lib.init(icfg), key)
+
+    @jax.jit
+    def ingest(s, x, ids):
+        n = x.shape[0]
+        rows = (s.ptr + jnp.arange(n)) % buffer_size
+        buf = s.buf.at[rows].set(x.astype(jnp.float32))
+        buf_ids = s.buf_ids.at[rows].set(ids)
+        fill = jnp.minimum(s.fill + n, buffer_size)
+        since = s.since + n
+        rng, kk = jax.random.split(s.rng)
+
+        def rebuild(_):
+            # full k-means from scratch over the buffer = the expensive path
+            c0 = clustering.kmeans_plus_plus(kk, buf, k)
+            xn = l2_normalize(buf)
+            m = (jnp.arange(buffer_size) < fill)[:, None]
+            c = c0
+            for _ in range(3):  # Lloyd
+                lbl = jnp.argmax(xn @ c.T, axis=1)
+                lbl = jnp.where(m[:, 0], lbl, k)
+                sums = jax.ops.segment_sum(xn * m, lbl, num_segments=k + 1)[:k]
+                cnt = jax.ops.segment_sum(m[:, 0].astype(jnp.float32), lbl,
+                                          num_segments=k + 1)[:k]
+                c = jnp.where((cnt > 0)[:, None], sums / jnp.maximum(cnt, 1)[:, None], c)
+            lbl = jnp.where(m[:, 0], jnp.argmax(xn @ c.T, axis=1), k)
+            sims = jnp.max(xn @ c.T, axis=1)
+            best = jax.ops.segment_max(jnp.where(m[:, 0], sims, -jnp.inf), lbl,
+                                       num_segments=k + 1)[:k]
+            wins = m[:, 0] & (sims >= best[jnp.minimum(lbl, k - 1)])
+            rep = jnp.zeros((k,), jnp.int32).at[jnp.where(wins, lbl, k)].set(
+                jnp.where(wins, buf_ids, 0), mode="drop")
+            valid = best > -jnp.inf
+            return index_lib.upsert(icfg, index_lib.init(icfg),
+                                    jnp.arange(k, dtype=jnp.int32), c, rep, valid)
+
+        do = since >= rebuild_interval
+        idx = jax.lax.cond(do, rebuild, lambda _: s.index, None)
+        return S(buf, buf_ids, (s.ptr + n) % buffer_size, fill,
+                 jnp.where(do, 0, since), idx, rng)
+
+    def query(s, q, k_):
+        return index_lib.search(icfg, s.index, q, k_)
+
+    mem = lambda: buffer_size * dim * 4 + index_lib.memory_bytes(icfg)
+    return Method("full_rebuild", init, ingest, query, mem)
+
+
+# ---------------------------------------------------------- reservoir sample
+def make_reservoir(dim: int, k: int = 256):
+    icfg = index_lib.IndexConfig(capacity=k, dim=dim)
+
+    class S(NamedTuple):
+        index: index_lib.FlatIndex
+        seen: jnp.ndarray
+        rng: jax.Array
+
+    def init(key):
+        return S(index_lib.init(icfg), jnp.int32(0), key)
+
+    @jax.jit
+    def ingest(s, x, ids):
+        def step(carry, xs):
+            idx, seen, rng = carry
+            xi, di = xs
+            rng, ka, kb = jax.random.split(rng, 3)
+            seen = seen + 1
+            # Vitter: item t joins w.p. k/t, replacing a uniform slot
+            join = (jax.random.uniform(ka) < (k / jnp.maximum(seen, 1)))
+            slot = jnp.where(seen <= k, seen - 1,
+                             jax.random.randint(kb, (), 0, k)).astype(jnp.int32)
+            take = join | (seen <= k)
+            idx = jax.lax.cond(
+                take,
+                lambda a: index_lib.upsert(icfg, a, slot[None], xi[None],
+                                           di[None], jnp.array([True])),
+                lambda a: a, idx)
+            return (idx, seen, rng), None
+
+        (idx, seen, rng), _ = jax.lax.scan(step, (s.index, s.seen, s.rng), (x, ids))
+        return S(idx, seen, rng)
+
+    def query(s, q, k_):
+        return index_lib.search(icfg, s.index, q, k_)
+
+    return Method("reservoir", init, ingest, query,
+                  lambda: index_lib.memory_bytes(icfg))
+
+
+# ------------------------------------------------------- heap filtering only
+def make_heap_only(dim: int, n_anchors: int = 512, capacity: int = 100,
+                   admit_prob: float = 0.05):
+    hcfg = heavy_hitter.HHConfig(capacity=capacity, admit_prob=admit_prob,
+                                 policy=heavy_hitter.Policy.MIN_EVICT)
+    icfg = index_lib.IndexConfig(capacity=capacity, dim=dim)
+
+    class S(NamedTuple):
+        anchors: jnp.ndarray
+        hh: heavy_hitter.HHState
+        best_doc: jnp.ndarray   # [n_anchors, d] best doc vec per anchor label
+        best_id: jnp.ndarray    # [n_anchors] i32
+        best_sim: jnp.ndarray   # [n_anchors] f32
+        index: index_lib.FlatIndex
+        rng: jax.Array
+
+    def init(key):
+        ka, kb = jax.random.split(key)
+        anchors = l2_normalize(jax.random.normal(ka, (n_anchors, dim)))
+        return S(anchors, heavy_hitter.init(hcfg),
+                 jnp.zeros((n_anchors, dim), jnp.float32),
+                 jnp.full((n_anchors,), -1, jnp.int32),
+                 jnp.full((n_anchors,), -jnp.inf, jnp.float32),
+                 index_lib.init(icfg), kb)
+
+    @jax.jit
+    def ingest(s, x, ids):
+        xn = l2_normalize(x)
+        sims_all = xn @ s.anchors.T
+        labels = jnp.argmax(sims_all, axis=1).astype(jnp.int32)
+        sims = jnp.max(sims_all, axis=1)
+        rng, kh = jax.random.split(s.rng)
+        hh, _ = heavy_hitter.update_batch(hcfg, s.hh, labels, kh)
+        # track best doc per (frozen) anchor
+        seg = labels
+        best = jax.ops.segment_max(sims, seg, num_segments=n_anchors)
+        best = jnp.maximum(best, s.best_sim)
+        wins = sims >= best[labels]
+        best_doc = s.best_doc.at[jnp.where(wins, labels, n_anchors)].set(
+            jnp.where(wins[:, None], xn, 0), mode="drop")
+        best_id = s.best_id.at[jnp.where(wins, labels, n_anchors)].set(
+            jnp.where(wins, ids, 0), mode="drop")
+        # index rows = active labels' best docs
+        slots = jnp.arange(capacity, dtype=jnp.int32)
+        lbl = jnp.maximum(hh.labels, 0)
+        idx = index_lib.upsert(icfg, s.index, slots, best_doc[lbl], best_id[lbl],
+                               heavy_hitter.active_mask(hh))
+        return S(s.anchors, hh, best_doc, best_id, best, idx, rng)
+
+    def query(s, q, k_):
+        return index_lib.search(icfg, s.index, q, k_)
+
+    mem = lambda: (n_anchors * (dim + 2) * 4 + capacity * 8
+                   + index_lib.memory_bytes(icfg))
+    return Method("heap_only", init, ingest, query, mem)
+
+
+# ------------------------------------------------------------------ IVFPQ
+def make_ivfpq(dim: int, capacity: int = 4096, nlist: int = 64, m: int = 8,
+               nprobe: int = 8):
+    cfg = index_lib.IVFPQConfig(capacity=capacity, dim=dim, nlist=nlist, m=m,
+                                nprobe=nprobe)
+
+    class S(NamedTuple):
+        index: index_lib.IVFPQIndex
+        vecs: jnp.ndarray  # ids -> vectors are PQ-coded; keep none (true PQ)
+
+    def init(key, train_sample):
+        return S(index_lib.ivfpq_train(cfg, key, train_sample), jnp.zeros(()))
+
+    def ingest(s, x, ids):
+        return S(index_lib.ivfpq_add(cfg, s.index, x, ids), s.vecs)
+
+    def query(s, q, k_):
+        return index_lib.ivfpq_search(cfg, s.index, q, k_)
+
+    mem = lambda: (cfg.nlist * dim * 4 + cfg.m * 256 * (dim // cfg.m) * 4
+                   + capacity * (cfg.m + 8))
+    return Method("ivfpq_incremental", init, ingest, query, mem)
+
+
+# -------------------------------------------------------------------- SAKR
+def make_sakr(dim: int, k: int = 100, capacity: int = 100):
+    """Kang et al. 2024: single topic vector + k-means + min-heap top-B."""
+    pcfg = prefilter.PrefilterConfig(num_vectors=1, dim=dim, alpha=0.0,
+                                     basis="fixed")
+    ccfg = clustering.ClusterConfig(num_clusters=k, dim=dim)
+    hcfg = heavy_hitter.HHConfig(capacity=capacity, admit_prob=1.0,
+                                 policy=heavy_hitter.Policy.SPACE_SAVING)
+    pl_cfg = pipeline.PipelineConfig(pre=pcfg, clus=ccfg, hh=hcfg,
+                                     update_interval=1000)
+
+    def init(key, warmup=None):
+        return pipeline.init(pl_cfg, key, warmup)
+
+    def ingest(s, x, ids):
+        s2, _ = pipeline.ingest_batch(pl_cfg, s, x, ids)
+        return s2
+
+    def query(s, q, k_):
+        sc, rows, ids, _ = pipeline.query(pl_cfg, s, q, k_)
+        return sc, rows, ids
+
+    return Method("sakr", init, ingest, query,
+                  lambda: pipeline.state_memory_bytes(pl_cfg))
+
+
+# ------------------------------------------------------------ streaming RAG
+def make_streaming_rag(cfg: pipeline.PipelineConfig):
+    def init(key, warmup=None):
+        return pipeline.init(cfg, key, warmup)
+
+    def ingest(s, x, ids):
+        s2, _ = pipeline.ingest_batch(cfg, s, x, ids)
+        return s2
+
+    def query(s, q, k_):
+        sc, rows, ids, _ = pipeline.query(cfg, s, q, k_)
+        return sc, rows, ids
+
+    return Method("streaming_rag", init, ingest, query,
+                  lambda: pipeline.state_memory_bytes(cfg))

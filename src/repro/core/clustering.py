@@ -1,0 +1,153 @@
+"""Streaming mini-batch k-means (paper §Clustering & Label Assignment).
+
+Assignment is cosine nearest-centroid (Pallas ``assign`` kernel on TPU);
+updates follow the paper's per-assignment learning rate η = 1/(n_j + 1):
+
+    μ_j ← (1 − η) μ_j + η x .
+
+Two update modes:
+  * ``sequential`` — lax.scan per item; bit-exact paper semantics.
+  * ``batched``    — sklearn-MiniBatchKMeans semantics (the paper's actual
+    implementation, batch 50): assign the whole microbatch against frozen
+    centroids, then fold each cluster's batch-mean in with its total count.
+    For items of one batch landing in one cluster this is *identical* to the
+    sequential rule (the sequential updates telescope to the running mean
+    when the centroid used for assignment is frozen); the only divergence is
+    the assignment freshness, which tests bound explicitly.
+
+Initialization: k-means++ (Arthur & Vassilvitskii 2007, cited by the paper)
+over a warmup buffer, or unit-norm Gaussian when no warmup is given.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.assign.ops import assign as assign_op
+from repro.kernels.common import l2_normalize
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    num_clusters: int = 100      # k (paper Table 2; §Hyperparams uses 150)
+    dim: int = 384
+    update_mode: str = "batched"  # "batched" | "sequential"
+    use_pallas: bool | None = None
+
+
+class ClusterState(NamedTuple):
+    centroids: jnp.ndarray  # [k, d] f32
+    counts: jnp.ndarray     # [k] f32 — n_j, prior assignments
+
+
+def init(cfg: ClusterConfig, key: jax.Array) -> ClusterState:
+    c = jax.random.normal(key, (cfg.num_clusters, cfg.dim), jnp.float32)
+    return ClusterState(centroids=l2_normalize(c), counts=jnp.zeros((cfg.num_clusters,), jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def kmeans_plus_plus(key: jax.Array, data: jnp.ndarray, k: int) -> jnp.ndarray:
+    """k-means++ seeding over a warmup buffer (D² sampling), [k, d]."""
+    n = data.shape[0]
+    xn = l2_normalize(data)
+
+    k0, key = jax.random.split(key)
+    first = xn[jax.random.randint(k0, (), 0, n)]
+
+    def step(d2, key_i):
+        probs = d2 / jnp.maximum(jnp.sum(d2), 1e-12)
+        idx = jax.random.choice(key_i, n, p=probs)
+        c_new = xn[idx]
+        # distance to the new centroid under cosine geometry: 1 - cos
+        d_new = 1.0 - xn @ c_new
+        return jnp.minimum(d2, d_new), c_new
+
+    d2_0 = 1.0 - xn @ first
+    keys = jax.random.split(key, k - 1)
+    _, rest = jax.lax.scan(step, d2_0, keys)
+    return jnp.concatenate([first[None], rest], axis=0)
+
+
+def init_from_buffer(cfg: ClusterConfig, key: jax.Array, buffer: jnp.ndarray) -> ClusterState:
+    c = kmeans_plus_plus(key, buffer, cfg.num_clusters)
+    return ClusterState(centroids=c, counts=jnp.zeros((cfg.num_clusters,), jnp.float32))
+
+
+def assign(cfg: ClusterConfig, state: ClusterState, x: jnp.ndarray):
+    """Nearest centroid (cosine): (labels [B] i32, sims [B] f32)."""
+    return assign_op(x, state.centroids, use_pallas=cfg.use_pallas)
+
+
+def update_batched(
+    cfg: ClusterConfig, state: ClusterState, x: jnp.ndarray,
+    labels: jnp.ndarray, mask: jnp.ndarray,
+) -> ClusterState:
+    """MiniBatchKMeans fold-in: μ_j ← (n_j μ_j + Σ_batch x) / (n_j + m_j)."""
+    k = cfg.num_clusters
+    w = mask.astype(jnp.float32)
+    seg_lbl = jnp.where(mask, labels, k)  # masked items -> overflow bucket
+    sums = jax.ops.segment_sum(
+        x.astype(jnp.float32) * w[:, None], seg_lbl, num_segments=k + 1)[:k]
+    cnts = jax.ops.segment_sum(w, seg_lbl, num_segments=k + 1)[:k]
+    denom = state.counts + cnts
+    new_c = jnp.where(
+        (cnts > 0)[:, None],
+        (state.centroids * state.counts[:, None] + sums) / jnp.maximum(denom, 1.0)[:, None],
+        state.centroids,
+    )
+    return ClusterState(centroids=new_c, counts=denom)
+
+
+def update_sequential(
+    cfg: ClusterConfig, state: ClusterState, x: jnp.ndarray,
+    labels: jnp.ndarray, mask: jnp.ndarray,
+) -> ClusterState:
+    """Per-item EMA exactly as in Algorithm 1: η = 1/(n_j + 1)."""
+
+    def step(s, xs):
+        xi, li, mi = xs
+        n = s.counts[li]
+        eta = 1.0 / (n + 1.0)
+        c_new = (1.0 - eta) * s.centroids[li] + eta * xi.astype(jnp.float32)
+        centroids = jnp.where(mi, s.centroids.at[li].set(c_new), s.centroids)
+        counts = jnp.where(mi, s.counts.at[li].add(1.0), s.counts)
+        return ClusterState(centroids, counts), None
+
+    out, _ = jax.lax.scan(step, state, (x, labels, mask))
+    return out
+
+
+def update(cfg: ClusterConfig, state: ClusterState, x, labels, mask) -> ClusterState:
+    if cfg.update_mode == "frozen":   # ablation: no clustering updates
+        w = mask.astype(jnp.float32)
+        seg = jnp.where(mask, labels, cfg.num_clusters)
+        cnts = jax.ops.segment_sum(w, seg, num_segments=cfg.num_clusters + 1)
+        return ClusterState(state.centroids, state.counts + cnts[:cfg.num_clusters])
+    if cfg.update_mode == "sequential":
+        return update_sequential(cfg, state, x, labels, mask)
+    return update_batched(cfg, state, x, labels, mask)
+
+
+def within_cluster_variance(
+    state: ClusterState, x: jnp.ndarray, labels: jnp.ndarray
+) -> jnp.ndarray:
+    """Δ estimate for the paper bound: mean squared distance to assigned centroid."""
+    d = x.astype(jnp.float32) - state.centroids[labels]
+    return jnp.mean(jnp.sum(d * d, axis=-1))
+
+
+def merge(a: ClusterState, b: ClusterState) -> ClusterState:
+    """Count-weighted centroid merge across data shards (same k).
+
+    μ = (n_a μ_a + n_b μ_b) / (n_a + n_b) — the distributed-consistency rule
+    from DESIGN.md §5; exact when both shards fold disjoint item sets.
+    """
+    n = a.counts + b.counts
+    c = (a.centroids * a.counts[:, None] + b.centroids * b.counts[:, None])
+    c = jnp.where((n > 0)[:, None], c / jnp.maximum(n, 1.0)[:, None],
+                  0.5 * (a.centroids + b.centroids))
+    return ClusterState(centroids=c, counts=n)

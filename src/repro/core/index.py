@@ -1,0 +1,215 @@
+"""Retrieval indices (paper §Dynamic Knowledge Base Reconstruction).
+
+``FlatIndex`` — the paper's Faiss-IndexFlatIP analogue: a dense [cap, d]
+matrix with a validity mask and per-row doc ids. *Incremental upsert* is a
+row-scatter (``dynamic_update_slice`` under jit); queries are fused Pallas
+MIPS top-k. Functional updates make refresh atomic — a query always sees
+either the old or the new index, never a torn row (the paper's
+"refreshes prototypes without interrupting queries").
+
+``IVFPQIndex`` — the Faiss-IVFPQ-incremental baseline: coarse quantizer
+(k-means over nlist cells) + product quantization (m subspaces × 256
+codewords) with asymmetric LUT scoring, supporting incremental adds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import l2_normalize
+from repro.kernels.mips.ops import mips_topk
+
+
+# ----------------------------------------------------------------------------
+# Flat incremental-upsert index
+# ----------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class IndexConfig:
+    capacity: int = 256
+    dim: int = 384
+    normalize: bool = True     # store unit vectors -> cosine MIPS
+    use_pallas: bool | None = None
+
+
+class FlatIndex(NamedTuple):
+    vectors: jnp.ndarray   # [cap, d] f32
+    ids: jnp.ndarray       # [cap] i32 — external id per row (-1 = none)
+    valid: jnp.ndarray     # [cap] bool
+    version: jnp.ndarray   # i32 — bumped on every upsert batch
+
+
+def init(cfg: IndexConfig) -> FlatIndex:
+    return FlatIndex(
+        vectors=jnp.zeros((cfg.capacity, cfg.dim), jnp.float32),
+        ids=jnp.full((cfg.capacity,), -1, jnp.int32),
+        valid=jnp.zeros((cfg.capacity,), bool),
+        version=jnp.int32(0),
+    )
+
+
+def upsert(
+    cfg: IndexConfig, index: FlatIndex, rows: jnp.ndarray,
+    vectors: jnp.ndarray, ids: jnp.ndarray, valid: jnp.ndarray,
+) -> FlatIndex:
+    """Scatter ``vectors`` into ``rows``; rows with valid=False are tombstoned.
+
+    rows: [m] i32 slot ids; vectors: [m, d]; ids: [m] i32; valid: [m] bool.
+    """
+    v = l2_normalize(vectors) if cfg.normalize else vectors.astype(jnp.float32)
+    return FlatIndex(
+        vectors=index.vectors.at[rows].set(v),
+        ids=index.ids.at[rows].set(jnp.where(valid, ids, -1)),
+        valid=index.valid.at[rows].set(valid),
+        version=index.version + 1,
+    )
+
+
+def search(cfg: IndexConfig, index: FlatIndex, queries: jnp.ndarray, k: int):
+    """Top-k MIPS over valid rows: (scores [Q,k], rows [Q,k], ids [Q,k])."""
+    q = l2_normalize(queries) if cfg.normalize else queries.astype(jnp.float32)
+    scores, rows = mips_topk(q, index.vectors, index.valid, k,
+                             use_pallas=cfg.use_pallas)
+    return scores, rows, index.ids[rows]
+
+
+def size(index: FlatIndex) -> jnp.ndarray:
+    return jnp.sum(index.valid.astype(jnp.int32))
+
+
+def memory_bytes(cfg: IndexConfig) -> int:
+    """Resident bytes of the index state (for the memory-budget benches)."""
+    return cfg.capacity * cfg.dim * 4 + cfg.capacity * (4 + 1) + 4
+
+
+# ----------------------------------------------------------------------------
+# IVF-PQ incremental baseline (Faiss IVFPQ analogue, pure JAX)
+# ----------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class IVFPQConfig:
+    capacity: int = 4096
+    dim: int = 384
+    nlist: int = 64       # coarse cells
+    m: int = 8            # PQ subspaces (dim % m == 0)
+    nbits: int = 8        # codewords per subspace = 2**nbits
+    nprobe: int = 8
+    use_pallas: bool | None = None
+
+
+class IVFPQIndex(NamedTuple):
+    coarse: jnp.ndarray     # [nlist, d] cell centroids
+    codebooks: jnp.ndarray  # [m, 2**nbits, d/m]
+    codes: jnp.ndarray      # [cap, m] uint8 PQ codes
+    cell: jnp.ndarray       # [cap] i32 coarse assignment
+    ids: jnp.ndarray        # [cap] i32
+    valid: jnp.ndarray      # [cap] bool
+    write_ptr: jnp.ndarray  # i32 (ring)
+
+
+def ivfpq_train(cfg: IVFPQConfig, key: jax.Array, sample: jnp.ndarray) -> IVFPQIndex:
+    """Train coarse + PQ codebooks on a sample via a few Lloyd iterations."""
+    from repro.core.clustering import kmeans_plus_plus
+
+    xs = l2_normalize(sample)
+    k1, k2 = jax.random.split(key)
+    coarse = kmeans_plus_plus(k1, xs, cfg.nlist)
+    for _ in range(4):  # Lloyd refinement
+        lbl = jnp.argmax(xs @ coarse.T, axis=1)
+        sums = jax.ops.segment_sum(xs, lbl, num_segments=cfg.nlist)
+        cnts = jax.ops.segment_sum(jnp.ones(xs.shape[0]), lbl, num_segments=cfg.nlist)
+        coarse = jnp.where((cnts > 0)[:, None],
+                           sums / jnp.maximum(cnts, 1.0)[:, None], coarse)
+
+    dsub = cfg.dim // cfg.m
+    ncode = 2 ** cfg.nbits
+    resid = xs - coarse[jnp.argmax(xs @ coarse.T, axis=1)]
+    subs = resid.reshape(-1, cfg.m, dsub).transpose(1, 0, 2)  # [m, n, dsub]
+
+    def train_sub(sub, key_m):
+        idx = jax.random.choice(key_m, sub.shape[0], (ncode,), replace=True)
+        cb = sub[idx]
+        for _ in range(4):
+            d2 = (jnp.sum(sub**2, 1, keepdims=True) - 2 * sub @ cb.T
+                  + jnp.sum(cb**2, 1)[None])
+            lbl = jnp.argmin(d2, axis=1)
+            sums = jax.ops.segment_sum(sub, lbl, num_segments=ncode)
+            cnts = jax.ops.segment_sum(jnp.ones(sub.shape[0]), lbl, num_segments=ncode)
+            cb = jnp.where((cnts > 0)[:, None], sums / jnp.maximum(cnts, 1.0)[:, None], cb)
+        return cb
+
+    keys = jax.random.split(k2, cfg.m)
+    codebooks = jnp.stack([train_sub(subs[i], keys[i]) for i in range(cfg.m)])
+
+    return IVFPQIndex(
+        coarse=coarse,
+        codebooks=codebooks,
+        codes=jnp.zeros((cfg.capacity, cfg.m), jnp.uint8),
+        cell=jnp.full((cfg.capacity,), -1, jnp.int32),
+        ids=jnp.full((cfg.capacity,), -1, jnp.int32),
+        valid=jnp.zeros((cfg.capacity,), bool),
+        write_ptr=jnp.int32(0),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def ivfpq_add(cfg: IVFPQConfig, index: IVFPQIndex, x: jnp.ndarray, ids: jnp.ndarray) -> IVFPQIndex:
+    """Incremental add (ring-buffer overwrite past capacity)."""
+    xs = l2_normalize(x)
+    cell = jnp.argmax(xs @ index.coarse.T, axis=1).astype(jnp.int32)
+    resid = xs - index.coarse[cell]
+    dsub = cfg.dim // cfg.m
+    subs = resid.reshape(-1, cfg.m, dsub)
+
+    def encode_sub(sub_i, cb_i):  # [n, dsub] x [ncode, dsub]
+        d2 = (jnp.sum(sub_i**2, 1, keepdims=True) - 2 * sub_i @ cb_i.T
+              + jnp.sum(cb_i**2, 1)[None])
+        return jnp.argmin(d2, axis=1).astype(jnp.uint8)
+
+    codes = jnp.stack(
+        [encode_sub(subs[:, i], index.codebooks[i]) for i in range(cfg.m)], axis=1)
+
+    n = x.shape[0]
+    rows = (index.write_ptr + jnp.arange(n)) % cfg.capacity
+    return IVFPQIndex(
+        coarse=index.coarse,
+        codebooks=index.codebooks,
+        codes=index.codes.at[rows].set(codes),
+        cell=index.cell.at[rows].set(cell),
+        ids=index.ids.at[rows].set(ids),
+        valid=index.valid.at[rows].set(True),
+        write_ptr=(index.write_ptr + n) % cfg.capacity,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "k"))
+def ivfpq_search(cfg: IVFPQConfig, index: IVFPQIndex, queries: jnp.ndarray, k: int):
+    """Asymmetric-distance search: coarse nprobe + PQ LUT scoring."""
+    q = l2_normalize(queries)                                # [Q, d]
+    coarse_sim = q @ index.coarse.T                          # [Q, nlist]
+    _, probe = jax.lax.top_k(coarse_sim, cfg.nprobe)         # [Q, nprobe]
+
+    dsub = cfg.dim // cfg.m
+    qsub = q.reshape(q.shape[0], cfg.m, dsub)                # [Q, m, dsub]
+    # LUT: inner products of each query subvector with every codeword.
+    lut = jnp.einsum("qmd,mcd->qmc", qsub, index.codebooks)  # [Q, m, ncode]
+
+    # residual-space score of every DB row for every query
+    code_scores = jnp.sum(
+        jnp.take_along_axis(
+            lut[:, None],                                    # [Q, 1, m, ncode]
+            index.codes.astype(jnp.int32)[None, :, :, None], # [1, cap, m, 1]
+            axis=3,
+        )[..., 0],
+        axis=2,
+    )                                                        # [Q, cap]
+    full = code_scores + jnp.take_along_axis(
+        coarse_sim, index.cell[None].clip(0), axis=1)        # + q·c_cell
+
+    in_probe = jnp.any(index.cell[None, :, None] == probe[:, None, :], axis=-1)
+    ok = in_probe & index.valid[None, :]
+    masked = jnp.where(ok, full, -1e30)
+    scores, rows = jax.lax.top_k(masked, k)
+    return scores, rows, index.ids[rows]

@@ -1,0 +1,220 @@
+"""The Streaming RAG pipeline (paper Algorithm 1), fused per-microbatch.
+
+    x_t --Pre-filter--> x̃_t --Cluster--> μ_j* --Heavy-Hitter--> C_t
+        --Index-Update--> I_t
+
+State is a single pytree: jit-compiled ingest steps, `lax.scan`-able over
+stream chunks (throughput benches), checkpointable (fault tolerance), and
+shard-mergeable (distributed ingest). Per-arrival semantics inside a
+microbatch are preserved by scanning the counter update item-by-item.
+
+Each cluster also tracks a *representative document* (the best-similarity
+member seen so far) so retrieval can surface concrete documents for the
+downstream QA/summarization benches, not just prototype vectors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import clustering, heavy_hitter, index as index_lib, prefilter
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    """Defaults follow paper Table 2."""
+
+    pre: prefilter.PrefilterConfig = prefilter.PrefilterConfig()
+    clus: clustering.ClusterConfig = clustering.ClusterConfig()
+    hh: heavy_hitter.HHConfig = heavy_hitter.HHConfig()
+    update_interval: int = 1000   # index upsert every N arrivals
+
+    @property
+    def index(self) -> index_lib.IndexConfig:
+        return index_lib.IndexConfig(
+            capacity=self.hh.bmax(), dim=self.clus.dim,
+            normalize=True, use_pallas=self.clus.use_pallas)
+
+    def __post_init__(self):
+        assert self.pre.dim == self.clus.dim, "prefilter/cluster dim mismatch"
+
+
+class PipelineState(NamedTuple):
+    pre: prefilter.PrefilterState
+    clus: clustering.ClusterState
+    hh: heavy_hitter.HHState
+    index: index_lib.FlatIndex
+    rep_ids: jnp.ndarray      # [k] i32 best-similarity doc id per cluster
+    rep_sims: jnp.ndarray     # [k] f32
+    arrivals: jnp.ndarray     # i32 — total docs seen (stream offset)
+    since_upsert: jnp.ndarray  # i32
+    kept: jnp.ndarray         # i32 — passed the pre-filter
+    upserts: jnp.ndarray      # i32 — index refresh batches
+    rng: jax.Array
+
+
+def init(cfg: PipelineConfig, key: jax.Array,
+         warmup: jnp.ndarray | None = None) -> PipelineState:
+    k1, k2, k3 = jax.random.split(key, 3)
+    clus = (clustering.init_from_buffer(cfg.clus, k2, warmup)
+            if warmup is not None else clustering.init(cfg.clus, k2))
+    k_clusters = cfg.clus.num_clusters
+    return PipelineState(
+        pre=prefilter.init(cfg.pre, k1, warmup),
+        clus=clus,
+        hh=heavy_hitter.init(cfg.hh),
+        index=index_lib.init(cfg.index),
+        rep_ids=jnp.full((k_clusters,), -1, jnp.int32),
+        rep_sims=jnp.full((k_clusters,), -jnp.inf, jnp.float32),
+        arrivals=jnp.int32(0),
+        since_upsert=jnp.int32(0),
+        kept=jnp.int32(0),
+        upserts=jnp.int32(0),
+        rng=k3,
+    )
+
+
+def _update_representatives(state_rep, labels, sims, doc_ids, keep, k):
+    """Track the *freshest* member doc per cluster (recency scatter-max).
+
+    Doc ids are monotone in arrival time, so the max id is the newest
+    member — retrieval then surfaces current facts, which is the entire
+    point of a streaming index (the paper's time-sensitive QA case study).
+    rep_sims tracks that member's similarity for diagnostics.
+    """
+    rep_ids, rep_sims = state_rep
+    seg = jnp.where(keep, labels, k)
+    newest = jax.ops.segment_max(
+        jnp.where(keep, doc_ids, -1), seg, num_segments=k + 1)[:k]
+    new_ids = jnp.maximum(rep_ids, newest.astype(jnp.int32))
+    wins = keep & (doc_ids >= new_ids[jnp.minimum(labels, k - 1)])
+    new_sims = rep_sims
+    new_sims = new_sims.at[jnp.where(wins, labels, k)].set(
+        jnp.where(wins, sims, 0.0), mode="drop")
+    return new_ids, new_sims
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnames=("state",))
+def ingest_batch(cfg: PipelineConfig, state: PipelineState,
+                 x: jnp.ndarray, doc_ids: jnp.ndarray):
+    """Process one microbatch of embeddings [B, d] with external ids [B] i32.
+
+    Returns (new_state, info dict of per-batch diagnostics).
+    """
+    B = x.shape[0]
+    k = cfg.clus.num_clusters
+    rng, k_hh = jax.random.split(state.rng)
+
+    # (1) adaptive-basis window ingest + (2) relevance screening
+    pre = prefilter.ingest(cfg.pre, state.pre, x)
+    r, keep = prefilter.score(cfg.pre, pre, x)
+
+    # (3) cluster assignment + centroid update (only retained items)
+    labels, sims = clustering.assign(cfg.clus, state.clus, x)
+    clus = clustering.update(cfg.clus, state.clus, x, labels, keep)
+
+    # (4) heavy-hitter counting over retained labels (per-arrival scan)
+    masked_labels = jnp.where(keep, labels, -1).astype(jnp.int32)
+    hh, hh_info = heavy_hitter.update_batch(cfg.hh, state.hh, masked_labels, k_hh)
+
+    # representative docs per cluster
+    rep_ids, rep_sims = _update_representatives(
+        (state.rep_ids, state.rep_sims), labels, sims, doc_ids, keep, k)
+
+    # (5) incremental index upsert every `update_interval` arrivals
+    since = state.since_upsert + B
+
+    def do_upsert(args):
+        idx, hh_s = args
+        slots = jnp.arange(cfg.hh.bmax(), dtype=jnp.int32)
+        lbl = hh_s.labels
+        vecs = clus.centroids[jnp.maximum(lbl, 0)]
+        ids = rep_ids[jnp.maximum(lbl, 0)]
+        valid = heavy_hitter.active_mask(hh_s)
+        return index_lib.upsert(cfg.index, idx, slots, vecs, ids, valid)
+
+    refresh = since >= cfg.update_interval
+    new_index = jax.lax.cond(
+        refresh, do_upsert, lambda args: args[0], (state.index, hh))
+
+    new_state = PipelineState(
+        pre=pre, clus=clus, hh=hh, index=new_index,
+        rep_ids=rep_ids, rep_sims=rep_sims,
+        arrivals=state.arrivals + B,
+        since_upsert=jnp.where(refresh, 0, since),
+        kept=state.kept + jnp.sum(keep.astype(jnp.int32)),
+        upserts=state.upserts + refresh.astype(jnp.int32),
+        rng=rng,
+    )
+    info = {
+        "relevance": r,
+        "keep": keep,
+        "labels": masked_labels,
+        "sims": sims,
+        "admitted": hh_info["admitted"],
+        "evicted_label": hh_info["evicted_label"],
+        "refreshed": refresh,
+    }
+    return new_state, info
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnames=("state",))
+def ingest_stream(cfg: PipelineConfig, state: PipelineState,
+                  chunks: jnp.ndarray, chunk_ids: jnp.ndarray) -> PipelineState:
+    """lax.scan ingest over [n_batches, B, d] (+ ids [n_batches, B]).
+
+    This is the throughput-bench entry point: one device dispatch for the
+    whole stream chunk.
+    """
+
+    def step(s, xs):
+        xb, ib = xs
+        s2, _ = ingest_batch(cfg, s, xb, ib)
+        return s2, None
+
+    out, _ = jax.lax.scan(step, state, (chunks, chunk_ids))
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "k"))
+def query(cfg: PipelineConfig, state: PipelineState, q: jnp.ndarray, k: int = 10):
+    """Retrieve top-k prototypes: (scores [Q,k], slots, doc_ids, cluster_labels)."""
+    scores, rows, ids = index_lib.search(cfg.index, state.index, q, k)
+    return scores, rows, ids, state.hh.labels[rows]
+
+
+def state_memory_bytes(cfg: PipelineConfig) -> int:
+    """Peak resident bytes of the pipeline state (paper's memory metric)."""
+    d = cfg.clus.dim
+    k = cfg.clus.num_clusters
+    bmax = cfg.hh.bmax()
+    pre_w = cfg.pre.window if cfg.pre.basis == "adaptive" else 1
+    n = cfg.pre.num_vectors
+    cms = cfg.hh.cms_depth * cfg.hh.cms_width * 4
+    pre_b = (n * d + pre_w * d) * 4
+    clus_b = (k * d + k) * 4
+    hh_b = bmax * 8 + cms
+    idx_b = index_lib.memory_bytes(cfg.index)
+    rep_b = k * 8
+    return pre_b + clus_b + hh_b + idx_b + rep_b
+
+
+def budget_to_config(memory_mb: float, dim: int = 384,
+                     base: PipelineConfig | None = None) -> PipelineConfig:
+    """Map a memory budget to (k, B) the way the paper's sweep does (Table 6):
+    split the budget ~80/20 between cluster prototypes and index+window."""
+    base = base or PipelineConfig()
+    budget = memory_mb * 1e6
+    per_proto = dim * 4 * 2 + 24          # centroid + index row + bookkeeping
+    k = max(16, int(budget * 0.8 / per_proto))
+    b = max(16, min(k, int(budget * 0.2 / per_proto)))
+    return dataclasses.replace(
+        base,
+        pre=dataclasses.replace(base.pre, dim=dim),
+        clus=dataclasses.replace(base.clus, num_clusters=k, dim=dim),
+        hh=dataclasses.replace(base.hh, capacity=b, max_capacity=None),
+    )

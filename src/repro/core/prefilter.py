@@ -1,0 +1,148 @@
+"""Multi-vector cosine pre-filtering (paper §Multi-Vector Cosine Pre-filtering).
+
+Three basis instantiations (paper Table 7):
+  * ``fixed``    — Gram–Schmidt-orthogonalized seeded vectors (broad axes).
+  * ``random``   — QR-orthonormalized Gaussian control.
+  * ``adaptive`` — every T arrivals, PCA over a sliding window of the most
+    recent W embeddings; top-n principal directions become the basis.
+
+Scoring is the fused Pallas ``prefilter`` kernel on TPU. The adaptive PCA is
+deliberately host-jit jnp (d×d or W×W eigh — small, infrequent); the Gram
+trick picks the cheaper side.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import l2_normalize
+from repro.kernels.prefilter.ops import prefilter_scores
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefilterConfig:
+    num_vectors: int = 5          # n (paper Table 2)
+    dim: int = 384
+    alpha: float = 0.2            # relevance threshold
+    basis: str = "fixed"          # fixed | random | adaptive
+    window: int = 1000            # W — PCA sliding window (adaptive)
+    update_interval: int = 1000   # T — arrivals between basis refreshes
+    use_pallas: bool | None = None
+
+
+class PrefilterState(NamedTuple):
+    basis: jnp.ndarray          # [n, d] f32
+    window_buf: jnp.ndarray     # [W, d] f32 ring buffer (adaptive only; W=1 otherwise)
+    write_ptr: jnp.ndarray      # i32
+    fill: jnp.ndarray           # i32
+    since_update: jnp.ndarray   # i32
+
+
+def _gram_schmidt(v: jnp.ndarray) -> jnp.ndarray:
+    """Classical Gram–Schmidt rows->orthonormal rows (paper's fixed basis)."""
+    def step(basis, i):
+        vi = v[i]
+        proj = basis @ vi              # [n]
+        vi = vi - proj @ basis
+        vi = vi / jnp.maximum(jnp.linalg.norm(vi), 1e-12)
+        return basis.at[i].set(vi), None
+
+    basis0 = jnp.zeros_like(v)
+    basis, _ = jax.lax.scan(step, basis0, jnp.arange(v.shape[0]))
+    return basis
+
+
+def init(cfg: PrefilterConfig, key: jax.Array,
+         warmup: jnp.ndarray | None = None) -> PrefilterState:
+    """``warmup`` (optional [m, d] sample): the paper's fixed basis is a
+    *precomputed* set spanning broad thematic axes — when a warmup sample is
+    available, fixed/adaptive bases start from its top-n principal
+    directions (Gram–Schmidt-orthonormal by construction); ``random`` stays
+    a data-independent control."""
+    n, d = cfg.num_vectors, cfg.dim
+    g = jax.random.normal(key, (n, d), jnp.float32)
+    if cfg.basis in ("fixed", "adaptive"):
+        if warmup is not None:
+            basis = _pca_topn(warmup.astype(jnp.float32),
+                              jnp.int32(warmup.shape[0]), n)
+        else:
+            basis = _gram_schmidt(l2_normalize(g))
+    elif cfg.basis == "random":
+        q, _ = jnp.linalg.qr(g.T)      # [d, n] orthonormal columns
+        basis = q.T
+    else:
+        raise ValueError(f"unknown basis {cfg.basis!r}")
+    w = cfg.window if cfg.basis == "adaptive" else 1
+    return PrefilterState(
+        basis=basis,
+        window_buf=jnp.zeros((w, d), jnp.float32),
+        write_ptr=jnp.int32(0),
+        fill=jnp.int32(0),
+        since_update=jnp.int32(0),
+    )
+
+
+def score(cfg: PrefilterConfig, state: PrefilterState, x: jnp.ndarray):
+    """(r [B] f32, keep [B] bool) — keep iff mean cosine >= alpha."""
+    r = prefilter_scores(x, state.basis, use_pallas=cfg.use_pallas)
+    return r, r >= cfg.alpha
+
+
+def _pca_topn(buf: jnp.ndarray, fill: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Top-n *uncentered* principal directions of the (masked) window, [n, d].
+
+    Uncentered on purpose: the screening basis must span the thematic axes
+    of the embedding distribution *including* its dominant (corpus-mean)
+    direction — centering would remove exactly the component that separates
+    on-topic material from isotropic background noise. Components are
+    sign-aligned so on-topic items score positive mean cosine.
+    """
+    W, d = buf.shape
+    m = (jnp.arange(W) < fill).astype(jnp.float32)[:, None]
+    xc = buf * m
+    if W <= d:
+        # Gram trick: eigvecs of X Xᵀ (W×W), mapped back through Xᵀ.
+        g = xc @ xc.T
+        vals, vecs = jnp.linalg.eigh(g)            # ascending
+        top = vecs[:, -n:][:, ::-1]                # [W, n]
+        dirs = xc.T @ top                          # [d, n]
+    else:
+        cov = xc.T @ xc
+        vals, vecs = jnp.linalg.eigh(cov)
+        dirs = vecs[:, -n:][:, ::-1]               # [d, n]
+    basis = l2_normalize(dirs.T)                   # [n, d]
+    # sign-align: flip components whose mean projection is negative
+    proj = jnp.sum((xc @ basis.T), axis=0)         # [n]
+    return basis * jnp.where(proj >= 0, 1.0, -1.0)[:, None]
+
+
+def ingest(
+    cfg: PrefilterConfig, state: PrefilterState, x: jnp.ndarray
+) -> PrefilterState:
+    """Push a microbatch into the sliding window; refresh basis every T arrivals.
+
+    Non-adaptive bases are static: this is a no-op then.
+    """
+    if cfg.basis != "adaptive":
+        return state
+
+    B = x.shape[0]
+    W = state.window_buf.shape[0]
+    # Ring-buffer write of the batch (vectorized scatter with wraparound).
+    idx = (state.write_ptr + jnp.arange(B)) % W
+    buf = state.window_buf.at[idx].set(x.astype(jnp.float32))
+    ptr = (state.write_ptr + B) % W
+    fill = jnp.minimum(state.fill + B, W)
+    since = state.since_update + B
+
+    def refresh(_):
+        return _pca_topn(buf, fill, cfg.num_vectors), jnp.int32(0)
+
+    def keep(_):
+        return state.basis, since
+
+    basis, since_new = jax.lax.cond(since >= cfg.update_interval, refresh, keep, None)
+    return PrefilterState(basis, buf, ptr, fill, since_new)

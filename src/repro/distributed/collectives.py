@@ -1,0 +1,125 @@
+"""Distributed streaming-RAG state maintenance (DESIGN.md §5).
+
+The stream is sharded over the data axes; every shard runs the full local
+pipeline (prefilter -> cluster -> counter). Periodically the shards
+reconcile:
+
+  * centroids : count-weighted mean  — psum(n_j·μ_j) / psum(n_j)
+  * counters  : label-union merge    — all_gather(states) + fold of
+                heavy_hitter.merge (exact count-sum semantics)
+  * index     : rebuilt from the merged prototypes (a B×d broadcast)
+
+These run inside shard_map over the data axes; the model axis holds the
+sharded retrieval index (distributed MIPS: local top-k + global merge).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import clustering, heavy_hitter
+from repro.kernels.common import NEG_INF
+
+
+def merge_clusters(state: clustering.ClusterState, axis) -> clustering.ClusterState:
+    """Count-weighted centroid merge across ``axis`` (inside shard_map)."""
+    wsum = jax.lax.psum(state.centroids * state.counts[:, None], axis)
+    n = jax.lax.psum(state.counts, axis)
+    c = jnp.where((n > 0)[:, None], wsum / jnp.maximum(n, 1.0)[:, None],
+                  state.centroids)
+    return clustering.ClusterState(centroids=c, counts=n)
+
+
+def merge_counters(cfg: heavy_hitter.HHConfig, state: heavy_hitter.HHState,
+                   axis) -> heavy_hitter.HHState:
+    """All-gather shard counters and fold pairwise merges (inside shard_map)."""
+    gathered = jax.lax.all_gather(state, axis)  # leading axis = shards
+    n = jax.tree.leaves(gathered)[0].shape[0]
+    merged = jax.tree.map(lambda x: x[0], gathered)
+    for i in range(1, n):
+        merged = heavy_hitter.merge(
+            cfg, merged, jax.tree.map(lambda x: x[i], gathered))
+    return merged
+
+
+def make_distributed_merge(cfg, mesh, data_axis_names: tuple[str, ...]):
+    """shard_map-wrapped reconciliation of per-shard pipeline states.
+
+    Takes the data-sharded PipelineState pytree (counters/centroids differ
+    per shard) and returns one where cluster and counter state are globally
+    consistent (replicated across data shards).
+    """
+    from repro.core import index as index_lib, pipeline
+    shard_map = getattr(jax, "shard_map", None)
+    if shard_map is None:  # older jax
+        from jax.experimental.shard_map import shard_map
+
+    axis = data_axis_names
+
+    def local_merge(state: pipeline.PipelineState) -> pipeline.PipelineState:
+        clus = merge_clusters(state.clus, axis)
+        hh = merge_counters(cfg.hh, state.hh, axis)
+        # rebuild index rows from merged prototypes
+        slots = jnp.arange(cfg.hh.bmax(), dtype=jnp.int32)
+        vecs = clus.centroids[jnp.maximum(hh.labels, 0)]
+        rep = jax.lax.pmax(state.rep_ids, axis)
+        ids = rep[jnp.maximum(hh.labels, 0)]
+        valid = heavy_hitter.active_mask(hh)
+        idx = index_lib.upsert(cfg.index, state.index, slots, vecs, ids, valid)
+        rep_sims = jax.lax.pmax(state.rep_sims, axis)
+        return state._replace(clus=clus, hh=hh, index=idx,
+                              rep_ids=rep, rep_sims=rep_sims)
+
+    def shard_fn(stacked_slice):
+        # per-shard slice keeps a leading dim of 1 under shard_map
+        state = jax.tree.map(lambda x: x[0], stacked_slice)
+        merged = local_merge(state)
+        return jax.tree.map(lambda x: x[None], merged)
+
+    def merge_stacked(stacked_states):
+        """stacked_states: pytree with leading dim = #data shards."""
+        fn = shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: P(axis), stacked_states),),
+            out_specs=jax.tree.map(lambda _: P(axis), stacked_states),
+            check_vma=False)
+        return fn(stacked_states)
+
+    return merge_stacked
+
+
+# ---------------------------------------------------------------------------
+# Distributed MIPS: index rows sharded over the model axis
+# ---------------------------------------------------------------------------
+def distributed_mips_topk(q, index_rows, valid, k: int, axis: str = "model"):
+    """Local exact top-k per shard + all_gather merge (inside shard_map).
+
+    q replicated [Q, d]; index_rows/valid sharded on rows.
+    Returns globally-consistent (scores [Q,k], global row ids [Q,k]).
+    """
+    n_local = index_rows.shape[0]
+    s = q.astype(jnp.float32) @ index_rows.astype(jnp.float32).T
+    s = jnp.where(valid[None, :], s, NEG_INF)
+    loc_sc, loc_id = jax.lax.top_k(s, min(k, n_local))
+    shard = jax.lax.axis_index(axis)
+    glob_id = loc_id + shard * n_local
+    all_sc = jax.lax.all_gather(loc_sc, axis, axis=1, tiled=True)  # [Q, n*k]
+    all_id = jax.lax.all_gather(glob_id, axis, axis=1, tiled=True)
+    sc, pos = jax.lax.top_k(all_sc, k)
+    return sc, jnp.take_along_axis(all_id, pos, axis=1)
+
+
+def hierarchical_psum(x, pod_axis: str | None, data_axis: str):
+    """Explicit hierarchical all-reduce: reduce-scatter intra-pod, psum over
+    the (slow) pod axis on the scattered shard, all-gather intra-pod.
+    Matches what XLA derives from mesh order; exposed for the compression
+    path which needs to quantize only the inter-pod hop."""
+    if pod_axis is None:
+        return jax.lax.psum(x, data_axis)
+    shard = jax.lax.psum_scatter(x, data_axis, scatter_dimension=0,
+                                 tiled=True)
+    shard = jax.lax.psum(shard, pod_axis)
+    return jax.lax.all_gather(shard, data_axis, axis=0, tiled=True)

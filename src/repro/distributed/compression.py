@@ -1,0 +1,64 @@
+"""Gradient / merge-payload compression: int8 all-reduce with error feedback.
+
+1-bit-Adam-style EF: each shard keeps a residual e_t; the quantized value is
+q(g + e_t), and e_{t+1} = (g + e_t) − dequant(q). Unbiased over time, 4×
+less collective traffic for fp32 grads (8× under the inter-pod-only mode:
+intra-pod reduces run full precision, only the slow DCN hop is quantized —
+see collectives.hierarchical_psum).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    error: Any  # pytree matching grads
+
+
+def init_ef(grads_like) -> EFState:
+    return EFState(error=jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def quantize_int8(x: jnp.ndarray):
+    """Per-tensor symmetric int8: (q, scale)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x: jnp.ndarray, axis, ef_error: jnp.ndarray):
+    """Int8 all-reduce with error feedback (inside shard_map).
+
+    Exchanges int8 payloads + per-shard scales (all_gather), sums the
+    dequantized shards. Returns (mean-equivalent sum, new_error).
+    """
+    y = x.astype(jnp.float32) + ef_error
+    q, scale = quantize_int8(y)
+    new_error = y - dequantize_int8(q, scale)
+    # int8 payload over the wire; scales are scalar per shard
+    qs = jax.lax.all_gather(q, axis)                  # [n, ...] int8
+    ss = jax.lax.all_gather(scale, axis)              # [n]
+    total = jnp.tensordot(ss, qs.astype(jnp.float32), axes=([0], [0]))
+    return total, new_error
+
+
+def compressed_grad_allreduce(grads, ef: EFState, axis) -> tuple[Any, EFState]:
+    """Apply compressed_psum leaf-wise over a gradient pytree."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(ef.error)
+    outs, errs = [], []
+    for g, e in zip(flat_g, flat_e):
+        t, ne = compressed_psum(g, axis, e)
+        outs.append(t)
+        errs.append(ne)
+    return (jax.tree.unflatten(treedef, outs),
+            EFState(error=jax.tree.unflatten(treedef, errs)))

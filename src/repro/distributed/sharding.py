@@ -1,0 +1,169 @@
+"""Logical-axis -> mesh-axis sharding rules (DP / FSDP / TP / EP / SP).
+
+Every parameter carries logical axis names (models/layers.Builder); this
+module maps them onto a concrete mesh per architecture strategy:
+
+  TP   : heads / mlp / vocab / experts dims -> "model"
+  EP   : the experts dim of MoE weight stacks -> "model" (16 experts/chip
+         for deepseek-v3's 256 on a 16-wide model axis)
+  FSDP : the embed dim of large archs -> "data" (ZeRO-3-style; weights are
+         all-gathered per layer by XLA's SPMD partitioner)
+  DP   : batch dims of activations -> ("pod", "data")
+  SP   : decode KV caches shard their sequence dim over "model"
+         (flash-decode-style split; softmax over the sharded axis lowers to
+         the max/sum all-reduce pair)
+
+A dim is only sharded when its size divides the mesh axis (e.g. qwen2's 12
+heads stay replicated and the arch falls back to sequence sharding).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import axis_sizes, data_axes
+
+# logical axis -> preferred mesh axis
+TP_RULES = {
+    "heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "item_vocab": "model",
+    # replicated by default: kv_heads (<=16 and rarely divisible), head_dim,
+    # q_lora/kv_lora (latents), layers, gnn dims, small recsys towers
+}
+FSDP_RULES = {"embed": "data"}
+
+
+def rules_for(arch) -> dict[str, str]:
+    rules = dict(TP_RULES)
+    if getattr(getattr(arch, "cfg", None), "fsdp", False):
+        rules.update(FSDP_RULES)
+    return rules
+
+
+def _spec_for_leaf(shape, axes, rules, sizes) -> P:
+    parts = []
+    used = set()
+    for dim, name in enumerate(axes):
+        mesh_axis = rules.get(name)
+        if (mesh_axis and mesh_axis not in used and mesh_axis in sizes
+                and shape[dim] % sizes[mesh_axis] == 0):
+            parts.append(mesh_axis)
+            used.add(mesh_axis)
+        else:
+            parts.append(None)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def param_pspecs(arch, mesh):
+    """PartitionSpec tree matching arch.abstract_params()."""
+    sizes = axis_sizes(mesh)
+    rules = rules_for(arch)
+    shapes = arch.abstract_params()
+    axes = arch.param_axes()
+
+    def make(leaf, ax):
+        return _spec_for_leaf(leaf.shape, ax, rules, sizes)
+
+    return jax.tree.map(
+        make, shapes, axes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def opt_pspecs(arch, mesh, pspecs):
+    """OptState specs derived from param specs (handles Adafactor factoring)."""
+    from repro.train.optimizer import OptState
+
+    abstract = arch.abstract_train_state()
+    flat_p, treedef = jax.tree.flatten(arch.abstract_params())
+    flat_spec = treedef.flatten_up_to(pspecs)
+
+    def moment_spec(opt_leaf_tree):
+        """mu/nu tree: same structure as params up-to leaves (tuples for
+        factored Adafactor states)."""
+        if opt_leaf_tree is None:
+            return None
+        flat_o = treedef.flatten_up_to(opt_leaf_tree)
+        out = []
+        for o, p_sds, spec in zip(flat_o, flat_p, flat_spec):
+            if isinstance(o, tuple):  # factored (row, col)
+                full = tuple(spec) + (None,) * (len(p_sds.shape) - len(spec))
+                out.append((P(*full[:-1]), P(*(full[:-2] + full[-1:]))))
+            else:
+                out.append(spec)
+        return jax.tree.unflatten(treedef, out)
+
+    return OptState(step=P(), mu=moment_spec(abstract.opt.mu),
+                    nu=moment_spec(abstract.opt.nu))
+
+
+def train_state_pspecs(arch, mesh):
+    from repro.models.api import TrainState
+
+    pspec = param_pspecs(arch, mesh)
+    return TrainState(params=pspec, opt=opt_pspecs(arch, mesh, pspec))
+
+
+def batch_pspecs(arch, step_spec, mesh):
+    """Specs for the batch tree: batch dims over DP axes; KV caches get
+    sequence-sharding over the model axis (SP)."""
+    dp = data_axes(mesh)
+    sizes = axis_sizes(mesh)
+    dp_total = 1
+    for a in dp:
+        dp_total *= sizes[a]
+
+    flat = dp + (("model",) if "model" in sizes else ())
+    flat_total = dp_total * sizes.get("model", 1)
+
+    out = {}
+    for name, leaf in step_spec.input_specs.items():
+        if name == "cache":
+            out[name] = _cache_pspecs(leaf, dp, dp_total, sizes)
+            continue
+        axes = step_spec.batch_axes.get(name)
+        parts = []
+        for dim, ax in enumerate(axes or ()):
+            if ax in ("nodes", "edges") and leaf.shape[dim] % flat_total == 0:
+                # graph dims shard over every mesh axis (params replicated)
+                parts.append(flat)
+            elif ax in ("batch", "nodes", "edges") \
+                    and leaf.shape[dim] % dp_total == 0 and leaf.shape[dim] > 0:
+                parts.append(dp)
+            else:
+                parts.append(None)
+        while parts and parts[-1] is None:
+            parts.pop()
+        out[name] = P(*parts)
+    return out
+
+
+def _cache_pspecs(cache_tree, dp, dp_total, sizes):
+    """KV cache: [L, B, S, ...] -> P(None, dp, 'model', ...)."""
+    model = sizes.get("model", 1)
+
+    def spec(leaf):
+        shp = leaf.shape
+        if len(shp) >= 3:  # [L, B, S, ...]
+            b = dp if shp[1] % dp_total == 0 else None
+            s = "model" if shp[2] % model == 0 else None
+            return P(None, b, s)
+        if len(shp) == 2:  # pos [B, S]
+            b = dp if shp[0] % dp_total == 0 else None
+            s = "model" if shp[1] % model == 0 else None
+            return P(b, s)
+        if len(shp) == 1:  # len [B]
+            return P(dp if shp[0] % dp_total == 0 else None)
+        return P()
+
+    return jax.tree.map(spec, cache_tree)
+
+
+def shardings_from_pspecs(pspecs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        pspecs, is_leaf=lambda x: isinstance(x, P))

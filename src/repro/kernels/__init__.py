@@ -1,0 +1,25 @@
+"""Pallas TPU kernels for the streaming-RAG hot paths.
+
+Each kernel package has:
+  <name>.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd dispatching wrapper (kernel on TPU, oracle on CPU)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+Kernels:
+  prefilter — fused multi-vector cosine screening (paper stage 1)
+  assign    — fused nearest-centroid assignment (paper stage 2)
+  mips      — fused MIPS score + per-block top-k retrieval (paper stage 4)
+  bag       — TBE-style EmbeddingBag gather+segment-reduce (recsys substrate)
+"""
+from repro.kernels.assign.ops import assign
+from repro.kernels.bag.ops import embedding_bag
+from repro.kernels.mips.ops import mips_topk
+from repro.kernels.prefilter.ops import prefilter, prefilter_scores
+
+__all__ = [
+    "assign",
+    "embedding_bag",
+    "mips_topk",
+    "prefilter",
+    "prefilter_scores",
+]

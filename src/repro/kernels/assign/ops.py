@@ -1,0 +1,22 @@
+"""jit'd public wrapper for nearest-centroid assignment."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import use_pallas_default
+from repro.kernels.assign.ref import assign_ref
+
+
+def assign(x: jnp.ndarray, centroids: jnp.ndarray, *, use_pallas: bool | None = None):
+    """Nearest centroid by cosine: returns (best_id [B] i32, best_sim [B] f32).
+
+    Dispatches to the Pallas kernel on TPU (or under REPRO_FORCE_PALLAS=1,
+    interpret mode) and to the pure-jnp oracle otherwise.
+    """
+    if use_pallas is None:
+        use_pallas = use_pallas_default()
+    if use_pallas:
+        from repro.kernels.assign.assign import assign_pallas
+
+        return assign_pallas(x, centroids)
+    return assign_ref(x, centroids)

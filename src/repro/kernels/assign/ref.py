@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for nearest-centroid assignment (cosine similarity)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import l2_normalize
+
+
+def assign_ref(x: jnp.ndarray, centroids: jnp.ndarray):
+    """Nearest centroid by cosine similarity.
+
+    Args:
+      x: [B, d] batch of embeddings (any float dtype).
+      centroids: [K, d] centroid matrix.
+
+    Returns:
+      best_id: [B] int32 index of the nearest centroid.
+      best_sim: [B] float32 cosine similarity to it.
+    """
+    xn = l2_normalize(x)
+    cn = l2_normalize(centroids)
+    sims = xn @ cn.T  # [B, K] fp32
+    best_id = jnp.argmax(sims, axis=1).astype(jnp.int32)
+    best_sim = jnp.max(sims, axis=1)
+    return best_id, best_sim

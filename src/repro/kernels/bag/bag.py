@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: EmbeddingBag (TBE-style gather + segment-reduce).
+
+TPU adaptation of FBGEMM's table-batched-embedding: the index and segment-id
+lists are **scalar-prefetched** into SMEM and drive the BlockSpec index maps,
+so each grid step DMAs exactly one (1, d) embedding row HBM->VMEM and
+accumulates it into the (1, d) output block of its bag. Rows of a bag are
+contiguous (ops sorts by segment id), so the output block changes only at bag
+boundaries; the kernel re-initializes on first-visit, detected by comparing
+neighbouring segment ids — no zero-init pass over the output.
+
+Requires sorted segment_ids (the ops wrapper sorts). Empty bags are zeroed
+by the wrapper afterwards (their blocks are never visited).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import interpret_mode
+
+
+def _bag_kernel(idx_ref, seg_ref, row_ref, w_ref, out_ref):
+    i = pl.program_id(0)
+    row = row_ref[...].astype(jnp.float32) * w_ref[0, 0].astype(jnp.float32)
+
+    prev_seg = seg_ref[jnp.maximum(i, 1) - 1]
+    first = jnp.logical_or(i == 0, seg_ref[i] != prev_seg)
+
+    @pl.when(first)
+    def _init():
+        out_ref[...] = row
+
+    @pl.when(jnp.logical_not(first))
+    def _acc():
+        out_ref[...] += row
+
+
+@functools.partial(jax.jit, static_argnames=("num_bags", "mode"))
+def embedding_bag_pallas(
+    table: jnp.ndarray,
+    indices: jnp.ndarray,
+    segment_ids: jnp.ndarray,
+    num_bags: int,
+    weights: jnp.ndarray | None = None,
+    mode: str = "sum",
+):
+    """See ``ref.embedding_bag_ref``. Handles unsorted input by sorting."""
+    L = indices.shape[0]
+    d = table.shape[1]
+    if weights is None:
+        weights = jnp.ones((L,), jnp.float32)
+
+    # Sort by bag id so each bag's rows are contiguous grid steps.
+    order = jnp.argsort(segment_ids)
+    seg_s = segment_ids[order].astype(jnp.int32)
+    idx_s = indices[order].astype(jnp.int32)
+    w_s = weights[order].astype(jnp.float32)[:, None]  # [L, 1] VMEM input
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # idx_s, seg_s land in SMEM
+        grid=(L,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, idx, seg: (idx[i], 0)),
+            pl.BlockSpec((1, 1), lambda i, idx, seg: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, idx, seg: (seg[i], 0)),
+    )
+    out = pl.pallas_call(
+        _bag_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_bags, d), jnp.float32),
+        interpret=interpret_mode(),
+    )(idx_s, seg_s, table, w_s)
+
+    # Zero never-visited (empty) bags; optional mean normalization.
+    cnt = jax.ops.segment_sum(
+        jnp.ones((L,), jnp.float32), seg_s, num_segments=num_bags
+    )
+    out = jnp.where(cnt[:, None] > 0, out, 0.0)
+    if mode == "mean":
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out

@@ -1,0 +1,30 @@
+"""jit'd public wrapper for EmbeddingBag."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import use_pallas_default
+from repro.kernels.bag.ref import embedding_bag_ref
+
+
+def embedding_bag(
+    table: jnp.ndarray,
+    indices: jnp.ndarray,
+    segment_ids: jnp.ndarray,
+    num_bags: int,
+    weights: jnp.ndarray | None = None,
+    mode: str = "sum",
+    *,
+    use_pallas: bool | None = None,
+):
+    """EmbeddingBag over a ragged multi-hot batch: [num_bags, d] float32."""
+    assert mode in ("sum", "mean")
+    if use_pallas is None:
+        use_pallas = use_pallas_default()
+    if use_pallas:
+        from repro.kernels.bag.bag import embedding_bag_pallas
+
+        return embedding_bag_pallas(
+            table, indices, segment_ids, num_bags, weights, mode
+        )
+    return embedding_bag_ref(table, indices, segment_ids, num_bags, weights, mode)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for EmbeddingBag (ragged gather + segment-reduce).
+
+JAX has no native nn.EmbeddingBag; the reference composes jnp.take with
+jax.ops.segment_sum — this composition IS the recsys substrate op.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(
+    table: jnp.ndarray,
+    indices: jnp.ndarray,
+    segment_ids: jnp.ndarray,
+    num_bags: int,
+    weights: jnp.ndarray | None = None,
+    mode: str = "sum",
+):
+    """EmbeddingBag: out[b] = reduce_{i: segment_ids[i]==b} w[i] * table[indices[i]].
+
+    Args:
+      table: [V, d] embedding table.
+      indices: [L] int32 row ids into the table (ragged, flattened bags).
+      segment_ids: [L] int32 bag id per index (need not be sorted here).
+      num_bags: number of output bags B.
+      weights: optional [L] per-sample weights.
+      mode: 'sum' or 'mean'.
+
+    Returns:
+      [B, d] float32 bag embeddings (empty bags are zero).
+    """
+    rows = jnp.take(table, indices, axis=0).astype(jnp.float32)  # [L, d]
+    if weights is not None:
+        rows = rows * weights[:, None].astype(jnp.float32)
+    out = jax.ops.segment_sum(rows, segment_ids, num_segments=num_bags)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(
+            jnp.ones_like(segment_ids, dtype=jnp.float32), segment_ids,
+            num_segments=num_bags,
+        )
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out

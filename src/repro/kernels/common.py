@@ -1,0 +1,65 @@
+"""Shared helpers for the Pallas kernel package.
+
+All kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+validated on CPU with ``interpret=True``. ``ops.py`` wrappers dispatch to the
+pure-jnp oracle (``ref.py``) by default on CPU — interpret-mode Pallas is a
+correctness tool, not a fast path — and to the compiled kernel on TPU.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = float(-1e30)
+
+# MXU/VPU-aligned tile constants for TPU v5e.
+LANE = 128
+SUBLANE_F32 = 8
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(x: int, m: int) -> int:
+    return cdiv(x, m) * m
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def interpret_mode() -> bool:
+    """Pallas interpret=True everywhere except a real TPU backend."""
+    return not on_tpu()
+
+
+def use_pallas_default() -> bool:
+    """Kernel dispatch default: real kernels on TPU; oracle path on CPU.
+
+    Set REPRO_FORCE_PALLAS=1 to exercise interpret-mode kernels on CPU
+    (used by the kernel test sweeps).
+    """
+    if on_tpu():
+        return True
+    return os.environ.get("REPRO_FORCE_PALLAS", "0") == "1"
+
+
+def pad_dim(x: jnp.ndarray, axis: int, multiple: int, value=0.0) -> jnp.ndarray:
+    """Pad ``axis`` of ``x`` up to the next multiple of ``multiple``."""
+    size = x.shape[axis]
+    target = round_up(size, multiple)
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def l2_normalize(x: jnp.ndarray, axis: int = -1, eps: float = 1e-12) -> jnp.ndarray:
+    """fp32 L2 normalization (cosine paths always normalize in fp32)."""
+    x32 = x.astype(jnp.float32)
+    n = jnp.sqrt(jnp.sum(x32 * x32, axis=axis, keepdims=True))
+    return x32 / jnp.maximum(n, eps)

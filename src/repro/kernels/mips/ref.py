@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for top-k maximum-inner-product search (retrieval)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import NEG_INF
+
+
+def mips_topk_ref(q: jnp.ndarray, index: jnp.ndarray, valid: jnp.ndarray, k: int):
+    """Exact top-k inner-product search.
+
+    Args:
+      q: [Q, d] query vectors.
+      index: [N, d] candidate vectors.
+      valid: [N] bool — invalid rows can never be retrieved.
+      k: number of results per query.
+
+    Returns:
+      scores: [Q, k] float32 (descending).
+      ids: [Q, k] int32 row ids into ``index``.
+    """
+    s = (q.astype(jnp.float32) @ index.astype(jnp.float32).T)
+    s = jnp.where(valid[None, :], s, NEG_INF)
+    scores, ids = jax.lax.top_k(s, k)
+    return scores, ids.astype(jnp.int32)

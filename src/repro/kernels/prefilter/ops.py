@@ -1,0 +1,28 @@
+"""jit'd public wrapper for multi-vector cosine pre-filtering."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import use_pallas_default
+from repro.kernels.prefilter.ref import prefilter_scores_ref
+
+
+def prefilter_scores(
+    x: jnp.ndarray, basis: jnp.ndarray, *, use_pallas: bool | None = None
+) -> jnp.ndarray:
+    """Mean-cosine relevance r(x) of each row against the topic basis: [B] f32."""
+    if use_pallas is None:
+        use_pallas = use_pallas_default()
+    if use_pallas:
+        from repro.kernels.prefilter.prefilter import prefilter_scores_pallas
+
+        return prefilter_scores_pallas(x, basis)
+    return prefilter_scores_ref(x, basis)
+
+
+def prefilter(
+    x: jnp.ndarray, basis: jnp.ndarray, alpha: float, *, use_pallas: bool | None = None
+):
+    """Returns (r [B] f32, keep_mask [B] bool) with keep = r >= alpha."""
+    r = prefilter_scores(x, basis, use_pallas=use_pallas)
+    return r, r >= alpha

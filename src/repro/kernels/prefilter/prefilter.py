@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: fused multi-vector cosine screening.
+
+The topic basis is tiny (n ~ 5 vectors) so it is VMEM-resident for the whole
+launch; the kernel streams x in (bm, d) blocks and fuses fp32 normalization,
+the [bm, n] MXU matmul, and the mean-reduce, emitting one score per row.
+The [B, n] cosine matrix never exists in HBM.
+
+Grid: (B // bm,). n is padded to the 128-lane boundary with zero vectors and
+the mean divides by the true n.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import LANE, interpret_mode, pad_dim
+
+
+def _prefilter_kernel(x_ref, v_ref, r_ref, *, n_true: int):
+    x = x_ref[...].astype(jnp.float32)  # [bm, d]
+    v = v_ref[...].astype(jnp.float32)  # [np, d] (zero rows beyond n_true)
+
+    xinv = jax.lax.rsqrt(jnp.maximum(jnp.sum(x * x, axis=1, keepdims=True), 1e-24))
+    vnorm = jnp.sqrt(jnp.sum(v * v, axis=1, keepdims=True))
+    vinv = jnp.where(vnorm > 0, 1.0 / jnp.maximum(vnorm, 1e-12), 0.0)
+
+    s = jax.lax.dot_general(
+        x * xinv,
+        v * vinv,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [bm, np]; zero rows contribute 0 to the sum
+    r_ref[...] = (jnp.sum(s, axis=1) / n_true)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def prefilter_scores_pallas(x: jnp.ndarray, basis: jnp.ndarray, *, bm: int = 512):
+    """See ``ref.prefilter_scores_ref``."""
+    B, d = x.shape
+    n = basis.shape[0]
+    bm = min(bm, max(8, B))
+
+    xp = pad_dim(x, 0, bm)
+    vp = pad_dim(basis, 0, LANE)  # zero rows: excluded from mean via n_true
+    Bp = xp.shape[0]
+
+    kernel = functools.partial(_prefilter_kernel, n_true=n)
+    r = pl.pallas_call(
+        kernel,
+        grid=(Bp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((vp.shape[0], d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, 1), jnp.float32),
+        interpret=interpret_mode(),
+    )(xp, vp)
+    return r[:B, 0]

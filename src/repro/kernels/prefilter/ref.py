@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for multi-vector cosine pre-filtering (paper §Methodology).
+
+r(x) = (1/n) * sum_i cos(x, v_i);   keep iff r(x) >= alpha.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import l2_normalize
+
+
+def prefilter_scores_ref(x: jnp.ndarray, basis: jnp.ndarray) -> jnp.ndarray:
+    """Mean cosine relevance of each row of x against the topic basis.
+
+    Args:
+      x: [B, d] embeddings.
+      basis: [n, d] topic vectors.
+
+    Returns:
+      r: [B] float32 mean-cosine relevance scores.
+    """
+    xn = l2_normalize(x)
+    vn = l2_normalize(basis)
+    return jnp.mean(xn @ vn.T, axis=1)
+
+
+def prefilter_ref(x: jnp.ndarray, basis: jnp.ndarray, alpha: float):
+    r = prefilter_scores_ref(x, basis)
+    return r, r >= alpha

@@ -1,0 +1,232 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede every other import (jax locks the device count on first
+# init). 512 placeholder host devices back both production meshes; nothing
+# here allocates real buffers — params/batches are ShapeDtypeStructs.
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) cell and record memory/cost/collective analysis for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+  python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all --out-dir dryrun_results
+"""
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             out_path: str | None = None, verbose: bool = True) -> dict:
+    from repro.analysis import roofline
+    from repro.distributed import sharding
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.api import get_arch
+
+    arch = get_arch(arch_name)
+    sh = arch.shapes[shape_name]
+    if sh.skip:
+        result = {"arch": arch_name, "shape": shape_name,
+                  "mesh": "multi_pod" if multi_pod else "single_pod",
+                  "status": "skipped", "reason": sh.skip}
+        if out_path:
+            with open(out_path, "w") as f:
+                json.dump(result, f, indent=2)
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    spec = arch.step(shape_name)
+    t0 = time.time()
+
+    with mesh:
+        batch_specs = sharding.batch_pspecs(arch, spec, mesh)
+        batch_shardings = {
+            k: jax.sharding.NamedSharding(mesh, v) for k, v in batch_specs.items()
+            if not isinstance(v, dict)}
+        for k, v in batch_specs.items():
+            if isinstance(v, dict):  # cache subtree
+                batch_shardings[k] = jax.tree.map(
+                    lambda s: jax.sharding.NamedSharding(mesh, s), v,
+                    is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+        if spec.kind == "train":
+            state = arch.abstract_train_state()
+            state_pspecs = sharding.train_state_pspecs(arch, mesh)
+            out_shardings = (
+                jax.tree.map(lambda s: jax.sharding.NamedSharding(mesh, s), state_pspecs,
+                             is_leaf=lambda x: isinstance(
+                                 x, jax.sharding.PartitionSpec)),
+                None)
+        else:
+            state = arch.abstract_params()
+            state_pspecs = sharding.param_pspecs(arch, mesh)
+            out_shardings = None
+
+        state_shardings = jax.tree.map(
+            lambda s: jax.sharding.NamedSharding(mesh, s), state_pspecs,
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+        jitted = jax.jit(spec.fn,
+                         in_shardings=(state_shardings, batch_shardings),
+                         out_shardings=out_shardings,
+                         donate_argnums=(0,) if spec.donate else ())
+        lowered = jitted.lower(state, spec.input_specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        # --- analyses -------------------------------------------------------
+        mem = None
+        try:
+            ma = compiled.memory_analysis()
+            if ma is not None:
+                mem = {
+                    "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+                    "output_bytes": getattr(ma, "output_size_in_bytes", None),
+                    "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+                    "alias_bytes": getattr(ma, "alias_size_in_bytes", None),
+                }
+                if verbose:
+                    print("memory_analysis:", mem)
+        except Exception as e:  # CPU backend may not implement it
+            mem = {"error": str(e)}
+
+        cost = {}
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            cost = dict(ca) if ca else {}
+            if verbose:
+                keys = {k: v for k, v in cost.items()
+                        if k in ("flops", "bytes accessed", "transcendentals")}
+                print("cost_analysis:", keys)
+        except Exception as e:
+            cost = {"error": str(e)}
+
+        # Loop-aware cost model (XLA's cost_analysis counts while bodies
+        # once; lax.scan over layers/microbatches must be multiplied out).
+        from repro.analysis import hlo_cost
+        hlo = compiled.as_text()
+        loop_cost = hlo_cost.analyze(hlo)
+        if verbose:
+            print("loop-aware:", {k: (f"{v:.3e}" if isinstance(v, float)
+                                      else v)
+                                  for k, v in loop_cost.items()})
+
+    chips = mesh.devices.size
+    report = roofline.RooflineReport(
+        arch=arch_name, shape=shape_name,
+        mesh="multi_pod_2x16x16" if multi_pod else "single_pod_16x16",
+        chips=chips,
+        flops_per_chip=float(loop_cost["flops"]),
+        bytes_per_chip=float(loop_cost["bytes"]),
+        collective_bytes_per_chip=float(loop_cost["collective_bytes"]),
+        collectives=loop_cost["collective_counts"],
+        model_flops=roofline.model_flops_for(arch, shape_name),
+        memory_per_chip=(mem or {}).get("temp_bytes"),
+        compile_seconds=t_compile,
+    )
+    result = {
+        "status": "ok", "lower_seconds": t_lower,
+        "memory_analysis": mem,
+        "cost_analysis": {k: v for k, v in cost.items()
+                          if isinstance(v, (int, float))},
+        **report.to_json(),
+    }
+    if verbose:
+        print(f"[{arch_name} × {shape_name} × "
+              f"{'2x16x16' if multi_pod else '16x16'}] "
+              f"compute={report.compute_term:.3e}s "
+              f"memory={report.memory_term:.3e}s "
+              f"collective={report.collective_term:.3e}s "
+              f"dominant={report.dominant} "
+              f"(compile {t_compile:.1f}s)")
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=2, default=float)
+    return result
+
+
+def run_all(out_dir: str, meshes=("single", "multi"), archs=None,
+            per_cell_timeout: int = 3000):
+    """Drive every cell in an isolated subprocess (compile-crash isolation,
+    memory hygiene on the 1-core container)."""
+    os.makedirs(out_dir, exist_ok=True)
+    from repro.configs import ASSIGNED
+    from repro.models.api import get_arch
+
+    cells = []
+    for arch_name in (archs or ASSIGNED):
+        arch = get_arch(arch_name)
+        for shape_name in arch.shapes:
+            for m in meshes:
+                cells.append((arch_name, shape_name, m == "multi"))
+
+    failures = []
+    for arch_name, shape_name, multi in cells:
+        tag = f"{arch_name}__{shape_name}__{'multi' if multi else 'single'}"
+        out_path = os.path.join(out_dir, tag + ".json")
+        if os.path.exists(out_path):
+            with open(out_path) as f:
+                if json.load(f).get("status") in ("ok", "skipped"):
+                    print(f"[cached] {tag}")
+                    continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch_name, "--shape", shape_name, "--out", out_path]
+        if multi:
+            cmd.append("--multi-pod")
+        print(f"[run] {tag}", flush=True)
+        t0 = time.time()
+        try:
+            proc = subprocess.run(cmd, capture_output=True, text=True,
+                                  timeout=per_cell_timeout)
+            if proc.returncode != 0:
+                failures.append(tag)
+                with open(out_path, "w") as f:
+                    json.dump({"status": "failed",
+                               "stderr": proc.stderr[-4000:]}, f, indent=2)
+                print(f"[FAIL] {tag}\n{proc.stderr[-2000:]}")
+            else:
+                print(f"[ok] {tag} ({time.time()-t0:.0f}s)")
+        except subprocess.TimeoutExpired:
+            failures.append(tag)
+            with open(out_path, "w") as f:
+                json.dump({"status": "timeout"}, f)
+            print(f"[TIMEOUT] {tag}")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--archs", nargs="*", default=None)
+    ap.add_argument("--meshes", nargs="*", default=("single", "multi"))
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--out-dir", default="dryrun_results")
+    args = ap.parse_args()
+
+    if args.all:
+        failures = run_all(args.out_dir, meshes=args.meshes, archs=args.archs)
+        print("FAILURES:", failures or "none")
+        sys.exit(1 if failures else 0)
+
+    try:
+        run_cell(args.arch, args.shape, args.multi_pod, args.out)
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Single pod : (16, 16)    -> ("data", "model")        = 256 chips
+Multi-pod  : (2, 16, 16) -> ("pod", "data", "model") = 512 chips
+
+Defined as a FUNCTION so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before first jax init; everything else
+sees the real device count).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """The batch/data-parallel axes of a mesh (pod is an outer data axis)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over however many real devices exist (tests)."""
+    return jax.make_mesh(shape, axes)

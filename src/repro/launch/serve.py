@@ -1,0 +1,57 @@
+"""Serving launcher: ``python -m repro.launch.serve [--stream nyt] [...]``.
+
+Stands up the RAGServer over a simulated stream and drives a Zipf query
+workload against the live index, printing latency/recall stats.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--stream", default="nyt")
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--batches", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--qps", type=int, default=32, help="queries per batch")
+    ap.add_argument("--topk", type=int, default=10)
+    args = ap.parse_args()
+
+    from repro.configs.streaming_rag import paper_pipeline_config
+    from repro.data.streams import make_stream
+    from repro.serve.server import RAGServer, ServerConfig
+
+    stream = make_stream(args.stream, dim=args.dim)
+    warm = np.concatenate(
+        [stream.next_batch(args.batch)["embedding"] for _ in range(2)])
+    cfg = paper_pipeline_config(dim=args.dim, k=150, capacity=100,
+                                update_interval=256, alpha=0.1)
+    server = RAGServer(cfg, ServerConfig(max_batch=args.qps, topk=args.topk),
+                       jax.random.key(0), warmup=warm)
+
+    answered = 0
+    for i in range(args.batches):
+        b = stream.next_batch(args.batch)
+        qs = stream.queries(args.qps)
+        for q in qs["embedding"]:
+            server.submit(q)
+        outs = server.serve_round(b)
+        answered += len(outs)
+
+    outs = server.flush()
+    answered += len(outs)
+    lat = server.stats["query_latency_ms"]
+    print(f"docs ingested    : {server.stats['docs']}")
+    print(f"queries answered : {answered}")
+    print(f"batch latency ms : p50={np.percentile(lat, 50):.2f} "
+          f"p99={np.percentile(lat, 99):.2f}")
+    print(f"index size       : "
+          f"{int(np.asarray(server.state.index.valid).sum())} prototypes")
+
+
+if __name__ == "__main__":
+    main()

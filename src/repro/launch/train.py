@@ -1,0 +1,54 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs the fault-tolerant Trainer on synthetic data shaped by the arch's
+train step (real pipelines plug in via --data). On a real pod this is the
+per-host entry point; on CPU it runs the smoke-scale config by default.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default=None, help="train shape name")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--full", action="store_true",
+                    help="full (pod-scale) config instead of smoke")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-interval", type=int, default=25)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.models.api import get_arch
+    from repro.models.testing import dummy_batch
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    arch = get_arch(args.arch, smoke=not args.full)
+    shape = args.shape or next(n for n, s in arch.shapes.items()
+                               if s.kind == "train")
+    spec = arch.step(shape)
+
+    rng = np.random.default_rng(args.seed)
+
+    def data_iter():
+        i = 0
+        while True:
+            i += 1
+            yield dummy_batch(spec.input_specs, seed=i)
+
+    tr = Trainer(arch, TrainerConfig(
+        total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+        ckpt_interval=args.ckpt_interval, log_interval=10))
+    state, hist = tr.fit(data_iter())
+    for step, m in hist:
+        print(f"step {step}: loss={m.get('loss'):.4f} "
+              f"({m.get('steps_per_sec', 0):.2f} steps/s)")
+    print("final checkpoint:", tr.ckpt.latest_step())
+
+
+if __name__ == "__main__":
+    main()

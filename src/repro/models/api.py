@@ -1,0 +1,171 @@
+"""Architecture API: every assigned arch implements this protocol so the
+launcher, dry-run, roofline, and trainer treat all 10 uniformly.
+
+An Arch owns:
+  * init(key) -> params                      (concrete; smoke tests)
+  * abstract_params() -> ShapeDtypeStructs   (dry-run; no allocation)
+  * param_axes() -> logical-axis tree        (sharding rules input)
+  * shapes: {shape_name: ShapeDef}           (the assigned input-shape set)
+  * step(shape_name) -> StepSpec             (the jit-able step + input specs)
+
+StepSpec.fn signature is fn(state, batch) -> state-or-outputs where `state`
+is the params (serve) or TrainState (train). Batch entries and their logical
+sharding axes come from StepSpec.input_specs / batch_axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import optimizer as opt_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeDef:
+    name: str
+    kind: str                   # train | prefill | decode | serve | retrieval
+    dims: tuple[tuple[str, int], ...]  # named dims, e.g. (("seq", 4096), ...)
+    skip: str | None = None     # reason if this cell is skipped (noted in docs)
+
+    def dim(self, k: str) -> int:
+        return dict(self.dims)[k]
+
+
+class StepSpec(NamedTuple):
+    fn: Callable                       # (state, batch) -> out
+    input_specs: dict[str, jax.ShapeDtypeStruct]
+    batch_axes: dict[str, tuple]       # logical axes per batch entry
+    kind: str                          # train | serve
+    donate: bool = True
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: opt_lib.OptState
+
+
+class Arch:
+    """Base: subclasses set .name, .config, .shapes and implement _init/_steps."""
+
+    name: str = "base"
+    optimizer = opt_lib.OptimizerConfig()
+    shapes: dict[str, ShapeDef] = {}
+    microbatches: int = 1   # gradient-accumulation splits inside train_step
+
+    # -- params ---------------------------------------------------------------
+    def init(self, key: jax.Array):
+        raise NotImplementedError
+
+    def abstract_params(self):
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    def param_axes(self):
+        box = {}
+
+        def probe(k):
+            p = self.init_with_axes(k, box)
+            return p
+
+        jax.eval_shape(probe, jax.random.key(0))
+        return box["axes"]
+
+    def init_with_axes(self, key, box):
+        """Subclasses: run init, stash axes tree into box['axes'], return params."""
+        raise NotImplementedError
+
+    # -- train state ----------------------------------------------------------
+    def init_train_state(self, key: jax.Array) -> TrainState:
+        p = self.init(key)
+        return TrainState(params=p, opt=opt_lib.init(self.optimizer, p))
+
+    def abstract_train_state(self) -> TrainState:
+        return jax.eval_shape(self.init_train_state, jax.random.key(0))
+
+    def loss(self, params, batch, key=None):
+        raise NotImplementedError
+
+    def make_train_step(self):
+        ocfg = self.optimizer
+        M = max(1, int(self.microbatches))
+
+        def grad_of(params, batch):
+            def loss_fn(p):
+                out = self.loss(p, batch)
+                return (out if isinstance(out, tuple) else (out, {}))
+
+            return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+        def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+            if M == 1:
+                (loss, extras), grads = grad_of(state.params, batch)
+            else:
+                # gradient accumulation over a pre-split microbatch axis
+                # (leading dim == M, supplied by step specs — an in-step
+                # reshape would let the partitioner sub-split the data axis
+                # and lose batch sharding). fp32 accumulators.
+                scanned, carried = {}, {}
+                for k, v in batch.items():
+                    if v.ndim >= 1 and v.shape[0] == M:
+                        scanned[k] = v
+                    else:
+                        carried[k] = v
+
+                def micro(acc, mb):
+                    (l, ex), g = grad_of(state.params, {**mb, **carried})
+                    new = jax.tree.map(
+                        lambda a, gi: (a + gi.astype(a.dtype) / M), acc[0], g)
+                    return (new, acc[1] + l / M), ex
+
+                # accumulate in the param dtype: an fp32 accumulator for a
+                # bf16-param 671B model costs 2x params of HBM per chip
+                # (EXPERIMENTS.md §Perf) — bf16 accumulation over <=16
+                # microbatches loses ~2 bits, fp32 used for fp32-param archs
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, p.dtype), state.params)
+                (grads, loss), extras_all = jax.lax.scan(
+                    micro, (zeros, jnp.float32(0)), scanned)
+                extras = jax.tree.map(lambda x: jnp.mean(x), extras_all)
+
+            new_p, new_opt, metrics = opt_lib.apply(ocfg, state.params, grads,
+                                                    state.opt)
+            metrics = {**metrics, **extras, "loss": loss}
+            return TrainState(new_p, new_opt), metrics
+
+        return train_step
+
+    # -- steps ----------------------------------------------------------------
+    def step(self, shape_name: str) -> StepSpec:
+        raise NotImplementedError
+
+
+_REGISTRY: dict[str, Callable[[], Arch]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_arch(name: str, **overrides) -> Arch:
+    if name not in _REGISTRY:
+        # configs register lazily on import
+        import importlib
+        importlib.import_module("repro.configs")
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**overrides)
+
+
+def list_archs() -> list[str]:
+    import importlib
+    importlib.import_module("repro.configs")
+    return sorted(_REGISTRY)
+
+
+def sds(shape, dtype=jnp.float32) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)

@@ -1,0 +1,160 @@
+"""Memory-efficient (flash-style) attention in pure JAX with a custom VJP.
+
+Beyond-paper §Perf optimization: the baseline exact attention materializes
+[B, H, Sq, Sk] fp32 score tensors in HBM (the dominant memory-roofline term
+for every LM train/prefill cell — EXPERIMENTS.md §Perf). This version
+streams KV blocks with an online softmax:
+
+  forward : saves only (out, logsumexp) — O(B·Sq·H·D), never O(Sq·Sk)
+  backward: custom VJP recomputes per-block scores and accumulates
+            dq / dk / dv blockwise (the FlashAttention-1 recurrence)
+
+On TPU the inner block matmuls hit the MXU via XLA; block sizes bound the
+working set the same way a Pallas kernel's BlockSpec would (the jnp body is
+also the reference oracle for a future pallas port).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def _mask(q_pos, k_pos, causal, window, k_valid):
+    m = jnp.ones((q_pos.shape[0], 1, q_pos.shape[-1], k_pos.shape[-1]), bool)
+    pq = q_pos[:, None, :, None]
+    pk = k_pos[:, None, None, :]
+    if causal:
+        m &= pk <= pq
+    if window is not None:
+        m &= (pq - pk) < window
+    if k_valid is not None:
+        m &= k_valid[:, None, None, :]
+    return m
+
+
+def _blocks(x, bk, axis=1):
+    S = x.shape[axis]
+    nb = -(-S // bk)
+    pad = nb * bk - S
+    if pad:
+        padding = [(0, 0)] * x.ndim
+        padding[axis] = (0, pad)
+        x = jnp.pad(x, padding)
+    return jnp.moveaxis(
+        x.reshape(x.shape[:axis] + (nb, bk) + x.shape[axis + 1:]), axis, 0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def flash_attention(q, k, v, q_pos, k_pos, causal=True, window=None,
+                    scale=None, block_k=512):
+    """q: [B,Sq,H,D]; k/v: [B,Skv,H,Dk/Dv] (callers pre-repeat GQA KV).
+    Returns [B,Sq,H,Dv]."""
+    out, _ = _flash_fwd_inner(q, k, v, q_pos, k_pos, None, causal, window,
+                              scale, block_k)
+    return out
+
+
+def _flash_fwd_inner(q, k, v, q_pos, k_pos, k_valid, causal, window, scale,
+                     block_k):
+    B, Sq, H, D = q.shape
+    Dv = v.shape[-1]
+    sc = scale or 1.0 / math.sqrt(D)
+    q32 = (q.astype(jnp.float32) * sc).transpose(0, 2, 1, 3)   # [B,H,Sq,D]
+
+    kb = _blocks(k.astype(jnp.float32), block_k)               # [nb,B,bk,H,D]
+    vb = _blocks(v.astype(jnp.float32), block_k)
+    pkb = _blocks(k_pos, block_k, axis=1)                      # [nb,B,bk]
+    valid_b = _blocks(
+        k_valid if k_valid is not None
+        else jnp.ones(k.shape[:2], bool), block_k, axis=1)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        k_j, v_j, pk_j, ok_j = xs
+        s = jnp.einsum("bhqd,bjhd->bhqj", q32,
+                       k_j)                                    # [B,H,Sq,bk]
+        msk = _mask(q_pos, pk_j, causal, window, ok_j)
+        s = jnp.where(msk, s, NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqj,bjhd->bhqd", p, v_j)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), NEG, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (kb, vb, pkb, valid_b))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = (acc / l_safe[..., None]).transpose(0, 2, 1, 3).astype(q.dtype)
+    lse = m + jnp.log(l_safe)                                  # [B,H,Sq]
+    return out, lse
+
+
+def _fwd(q, k, v, q_pos, k_pos, causal, window, scale, block_k):
+    out, lse = _flash_fwd_inner(q, k, v, q_pos, k_pos, None, causal, window,
+                                scale, block_k)
+    return out, (q, k, v, q_pos, k_pos, out, lse)
+
+
+def _bwd(causal, window, scale, block_k, res, dout):
+    q, k, v, q_pos, k_pos, out, lse = res
+    B, Sq, H, D = q.shape
+    sc = scale or 1.0 / math.sqrt(D)
+    q32 = (q.astype(jnp.float32) * sc).transpose(0, 2, 1, 3)    # [B,H,Sq,D]
+    do = dout.astype(jnp.float32).transpose(0, 2, 1, 3)         # [B,H,Sq,Dv]
+    o32 = out.astype(jnp.float32).transpose(0, 2, 1, 3)
+    delta = jnp.sum(do * o32, axis=-1)                          # [B,H,Sq]
+
+    kb = _blocks(k.astype(jnp.float32), block_k)
+    vb = _blocks(v.astype(jnp.float32), block_k)
+    pkb = _blocks(k_pos, block_k, axis=1)
+    valid_b = _blocks(jnp.ones(k.shape[:2], bool), block_k, axis=1)
+
+    def step(dq_acc, xs):
+        k_j, v_j, pk_j, ok_j = xs
+        s = jnp.einsum("bhqd,bjhd->bhqj", q32, k_j)
+        msk = _mask(q_pos, pk_j, causal, window, ok_j)
+        s = jnp.where(msk, s, NEG)
+        p = jnp.exp(s - lse[..., None])                         # [B,H,Sq,bk]
+        dp = jnp.einsum("bhqd,bjhd->bhqj", do, v_j)
+        ds = p * (dp - delta[..., None])
+        dv_j = jnp.einsum("bhqj,bhqd->bjhd", p, do)
+        dk_j = jnp.einsum("bhqj,bhqd->bjhd", ds, q32)
+        dq_acc = dq_acc + jnp.einsum("bhqj,bjhd->bhqd", ds, k_j)
+        return dq_acc, (dk_j, dv_j)
+
+    dq0 = jnp.zeros_like(q32)
+    dq, (dkb, dvb) = jax.lax.scan(step, dq0, (kb, vb, pkb, valid_b))
+
+    def unblocks(xb, S):  # [nb,B,bk,H,D] -> [B,S,H,D]
+        nb, B_, bk = xb.shape[0], xb.shape[1], xb.shape[2]
+        x = jnp.moveaxis(xb, 0, 1).reshape(B_, nb * bk, *xb.shape[3:])
+        return x[:, :S]
+
+    dq = (dq * sc).transpose(0, 2, 1, 3).astype(q.dtype)
+    dk = unblocks(dkb, k.shape[1]).astype(k.dtype)
+    dv = unblocks(dvb, v.shape[1]).astype(v.dtype)
+    return dq, dk, dv, None, None
+
+
+flash_attention.defvjp(_fwd, _bwd)
+
+
+def flash_sdpa(q, k, v, q_pos, k_pos, *, n_heads, causal=True, window=None,
+               scale=None, block_k=512):
+    """GQA front end: repeat KV to full heads, then stream blocks."""
+    g = n_heads // k.shape[2]
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    return flash_attention(q, k, v, q_pos, k_pos, causal, window, scale,
+                           block_k)

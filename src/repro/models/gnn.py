@@ -1,0 +1,302 @@
+"""MeshGraphNet (Pfaff et al., arXiv:2010.03409): encode-process-decode GNN.
+
+Message passing is built on the JAX scatter/gather substrate — there is no
+CSR SpMM in JAX, so edge messages are gathered per edge-endpoint and reduced
+with ``jax.ops.segment_sum`` into destination nodes (this composition IS the
+system, per the assignment note). All four assigned graph shapes run through
+the same step with padded (node, edge) buffers + masks:
+
+  full_graph_sm  — 2,708 nodes / 10,556 edges / 1,433 feats (full batch)
+  minibatch_lg   — 232,965 nodes / 114.6M edges; sampled batch 1,024,
+                   fanout 15·10 (the sampler below builds the subgraph)
+  ogb_products   — 2,449,029 nodes / 61.8M edges (full-batch large)
+  molecule       — 30-node molecules, batch 128 (flattened disjoint union)
+
+Processor = 15 residual message-passing layers (d_hidden=128, sum
+aggregator, 2-layer MLPs with LayerNorm) run under lax.scan + remat.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.api import Arch, ShapeDef, StepSpec, sds
+from repro.train import optimizer as opt_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str = "meshgraphnet"
+    n_layers: int = 15
+    d_hidden: int = 128
+    mlp_layers: int = 2
+    aggregator: str = "sum"
+    d_edge_feat: int = 4
+    param_dtype: Any = jnp.float32
+    remat: bool = True
+
+
+GNN_SHAPES = {
+    "full_graph_sm": ShapeDef(
+        "full_graph_sm", "train",
+        (("n_nodes", 2708), ("n_edges", 10556), ("d_feat", 1433),
+         ("n_out", 7))),
+    "minibatch_lg": ShapeDef(
+        "minibatch_lg", "train",
+        (("n_nodes", 232965), ("n_edges", 114615892), ("batch_nodes", 1024),
+         ("fanout1", 15), ("fanout2", 10), ("d_feat", 602), ("n_out", 41),
+         # padded subgraph buffers: 1024·(1+15+150) nodes, 1024·(15+150) edges
+         ("pad_nodes", 169984), ("pad_edges", 168960))),
+    "ogb_products": ShapeDef(
+        "ogb_products", "train",
+        (("n_nodes", 2449029), ("n_edges", 61859140), ("d_feat", 100),
+         ("n_out", 47))),
+    "molecule": ShapeDef(
+        "molecule", "train",
+        (("n_nodes", 30), ("n_edges", 64), ("batch", 128), ("d_feat", 16),
+         ("n_out", 1))),
+}
+
+
+def _init_mlp_stack(key, d_in, d_hidden, d_out, n_hidden, dtype, norm=True):
+    """MLP with n_hidden hidden layers + optional final LayerNorm (MGN style)."""
+    b = L.Builder(key, dtype)
+    dims = [d_in] + [d_hidden] * n_hidden + [d_out]
+    for i in range(len(dims) - 1):
+        b.normal(f"w{i}", (dims[i], dims[i + 1]), ("gnn_in", "gnn_out"))
+        b.zeros(f"b{i}", (dims[i + 1],), ("gnn_out",))
+    if norm:
+        b.ones("ln_scale", (d_out,), ("gnn_out",))
+        b.zeros("ln_bias", (d_out,), ("gnn_out",))
+    return b.build()
+
+
+def _mlp_apply(p, x, n_layers):
+    for i in range(n_layers + 1):
+        x = x @ p[f"w{i}"] + p[f"b{i}"]
+        if i < n_layers:
+            x = jax.nn.relu(x)
+    if "ln_scale" in p:
+        x = L.layer_norm(x, p["ln_scale"], p["ln_bias"])
+    return x
+
+
+class MeshGraphNet(Arch):
+    def __init__(self, cfg: GNNConfig = GNNConfig(),
+                 optimizer: opt_lib.OptimizerConfig | None = None,
+                 shape_dims: dict[str, dict] | None = None):
+        self.cfg = cfg
+        self.name = cfg.name
+        self.shapes = dict(GNN_SHAPES)
+        if optimizer is not None:
+            self.optimizer = optimizer
+        # models are built per (d_feat, n_out); keep the superset dims
+        self.d_feat = max(s.dim("d_feat") for s in self.shapes.values())
+        self.n_out = max(s.dim("n_out") for s in self.shapes.values())
+
+    # -- params ---------------------------------------------------------------
+    def _init(self, key):
+        cfg = self.cfg
+        b = L.Builder(key, cfg.param_dtype)
+        k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+        h = cfg.d_hidden
+        ne, na = _init_mlp_stack(k1, self.d_feat, h, h, cfg.mlp_layers,
+                                 cfg.param_dtype)
+        b.sub("node_encoder", ne, na)
+        ee, ea = _init_mlp_stack(k2, cfg.d_edge_feat, h, h, cfg.mlp_layers,
+                                 cfg.param_dtype)
+        b.sub("edge_encoder", ee, ea)
+
+        def one_layer(k):
+            bb = L.Builder(k, cfg.param_dtype)
+            ka, kb = jax.random.split(k)
+            ep, ea_ = _init_mlp_stack(ka, 3 * h, h, h, cfg.mlp_layers,
+                                      cfg.param_dtype)
+            bb.sub("edge_mlp", ep, ea_)
+            np_, na_ = _init_mlp_stack(kb, 2 * h, h, h, cfg.mlp_layers,
+                                       cfg.param_dtype)
+            bb.sub("node_mlp", np_, na_)
+            return bb.build()
+
+        lp, la = L.stack_layers(k3, cfg.n_layers, one_layer)
+        b.sub("processor", lp, la)
+        dp, da = _init_mlp_stack(k4, h, h, self.n_out, cfg.mlp_layers,
+                                 cfg.param_dtype, norm=False)
+        b.sub("decoder", dp, da)
+        return b.build()
+
+    def init(self, key):
+        return self._init(key)[0]
+
+    def init_with_axes(self, key, box):
+        p, a = self._init(key)
+        box["axes"] = a
+        return p
+
+    # -- forward ----------------------------------------------------------------
+    def forward(self, params, batch):
+        """batch: node_feat [N,F], edge_src/edge_dst [E] i32, edge_feat [E,Fe],
+        node_mask [N] bool, edge_mask [E] bool -> node outputs [N, n_out]."""
+        cfg = self.cfg
+        nf = batch["node_feat"]
+        N = nf.shape[0]
+        # pad features to the model's superset width
+        if nf.shape[1] < self.d_feat:
+            nf = jnp.pad(nf, ((0, 0), (0, self.d_feat - nf.shape[1])))
+        src, dst = batch["edge_src"], batch["edge_dst"]
+        emask = batch["edge_mask"].astype(nf.dtype)[:, None]
+
+        hn = _mlp_apply(params["node_encoder"], nf, cfg.mlp_layers)
+        he = _mlp_apply(params["edge_encoder"], batch["edge_feat"],
+                        cfg.mlp_layers)
+
+        def mp_layer(carry, layer_p):
+            hn_c, he_c = carry
+
+            def body(hn_i, he_i):
+                # edge update: m_ij = MLP([e_ij, h_src, h_dst]) + e_ij
+                msg_in = jnp.concatenate(
+                    [he_i, hn_i[src], hn_i[dst]], axis=-1)
+                he_new = he_i + _mlp_apply(layer_p["edge_mlp"], msg_in,
+                                           cfg.mlp_layers) * emask
+                # node update: h_i' = MLP([h_i, Σ_in m]) + h_i
+                agg = jax.ops.segment_sum(he_new * emask, dst, num_segments=N)
+                hn_new = hn_i + _mlp_apply(
+                    layer_p["node_mlp"],
+                    jnp.concatenate([hn_i, agg], axis=-1), cfg.mlp_layers)
+                return hn_new, he_new
+
+            fn = jax.checkpoint(body) if cfg.remat else body
+            return fn(hn_c, he_c), None
+
+        (hn, he), _ = jax.lax.scan(mp_layer, (hn, he), params["processor"])
+        return _mlp_apply(params["decoder"], hn, cfg.mlp_layers)
+
+    def loss(self, params, batch, key=None):
+        out = self.forward(params, batch)
+        labels = batch["labels"]
+        mask = batch["node_mask"]
+        if labels.dtype in (jnp.int32, jnp.int64):  # node classification
+            lbl = jnp.where(mask, labels, -1)
+            ce = L.cross_entropy(out[None], lbl[None])
+            return ce, {"ce": ce}
+        # regression (molecule): graph-level target broadcast to nodes
+        m = mask.astype(jnp.float32)[:, None]
+        mse = jnp.sum(((out - labels) ** 2) * m) / jnp.maximum(jnp.sum(m), 1.0)
+        return mse, {"mse": mse}
+
+    # -- steps ------------------------------------------------------------------
+    def step(self, shape_name: str) -> StepSpec:
+        sh = self.shapes[shape_name]
+        d = dict(sh.dims)
+        if shape_name == "minibatch_lg":
+            N, E = d["pad_nodes"], d["pad_edges"]
+        elif shape_name == "molecule":
+            N, E = d["n_nodes"] * d["batch"], d["n_edges"] * d["batch"]
+        else:
+            N, E = d["n_nodes"], d["n_edges"]
+        # pad buffers to a 512-multiple so node/edge dims shard evenly on any
+        # production mesh (non-divisible dims replicate -> TB-scale blow-up
+        # on ogb_products; masks make the padding semantically free)
+        pad_to = 512
+        N = -(-N // pad_to) * pad_to
+        E = -(-E // pad_to) * pad_to
+        F = d["d_feat"]
+        n_out = d["n_out"]
+        lbl_dtype = jnp.float32 if shape_name == "molecule" else jnp.int32
+        lbl_shape = (N, n_out) if shape_name == "molecule" else (N,)
+
+        specs = {
+            "node_feat": sds((N, F)),
+            "edge_src": sds((E,), jnp.int32),
+            "edge_dst": sds((E,), jnp.int32),
+            "edge_feat": sds((E, self.cfg.d_edge_feat)),
+            "node_mask": sds((N,), jnp.bool_),
+            "edge_mask": sds((E,), jnp.bool_),
+            "labels": sds(lbl_shape, lbl_dtype),
+        }
+        axes = {
+            "node_feat": ("nodes", None), "edge_src": ("edges",),
+            "edge_dst": ("edges",), "edge_feat": ("edges", None),
+            "node_mask": ("nodes",), "edge_mask": ("edges",),
+            "labels": ("nodes", None) if shape_name == "molecule" else ("nodes",),
+        }
+        fn = self.make_train_step()
+        return StepSpec(fn=fn, input_specs=specs, batch_axes=axes, kind="train")
+
+
+# -----------------------------------------------------------------------------
+# Neighbor sampler (GraphSAGE-style uniform fanout, host numpy)
+# -----------------------------------------------------------------------------
+class NeighborSampler:
+    """Uniform fanout sampler over a CSR adjacency; emits padded subgraphs.
+
+    Used by the minibatch_lg pipeline: roots [B] -> L-hop frontier with
+    fanouts, returning a disjoint re-indexed subgraph with fixed buffer
+    sizes (pad_nodes/pad_edges) for jit-stable shapes.
+    """
+
+    def __init__(self, indptr: np.ndarray, indices: np.ndarray,
+                 fanouts: tuple[int, ...], seed: int = 0):
+        self.indptr = indptr
+        self.indices = indices
+        self.fanouts = fanouts
+        self.rng = np.random.default_rng(seed)
+
+    def sample(self, roots: np.ndarray, pad_nodes: int, pad_edges: int):
+        nodes = list(roots)
+        node_set = {int(r): i for i, r in enumerate(roots)}
+        src_l, dst_l = [], []
+        frontier = list(roots)
+        for f in self.fanouts:
+            nxt = []
+            for u in frontier:
+                lo, hi = self.indptr[u], self.indptr[u + 1]
+                deg = hi - lo
+                if deg == 0:
+                    continue
+                take = self.rng.integers(lo, hi, size=min(f, 4 * f))
+                nbrs = self.indices[take[:f]] if deg > f else \
+                    self.indices[lo:hi]
+                for v in np.asarray(nbrs):
+                    v = int(v)
+                    if v not in node_set:
+                        node_set[v] = len(nodes)
+                        nodes.append(v)
+                        nxt.append(v)
+                    # message flows neighbor -> u
+                    src_l.append(node_set[v])
+                    dst_l.append(node_set[u])
+            frontier = nxt
+        n, e = len(nodes), len(src_l)
+        n, e = min(n, pad_nodes), min(e, pad_edges)
+        out_nodes = np.zeros(pad_nodes, np.int64)
+        out_nodes[:n] = nodes[:n]
+        src = np.zeros(pad_edges, np.int32)
+        dst = np.zeros(pad_edges, np.int32)
+        src[:e] = src_l[:e]
+        dst[:e] = dst_l[:e]
+        node_mask = np.arange(pad_nodes) < n
+        edge_mask = np.arange(pad_edges) < e
+        return {
+            "orig_nodes": out_nodes, "edge_src": src, "edge_dst": dst,
+            "node_mask": node_mask, "edge_mask": edge_mask,
+            "n_nodes": n, "n_edges": e,
+        }
+
+
+def random_csr_graph(n_nodes: int, avg_degree: int, seed: int = 0):
+    """Synthetic power-law-ish CSR graph for tests/benches."""
+    rng = np.random.default_rng(seed)
+    deg = np.clip(rng.zipf(1.6, n_nodes), 1, 10 * avg_degree)
+    deg = (deg * (avg_degree / max(deg.mean(), 1e-9))).astype(np.int64)
+    deg = np.maximum(deg, 1)
+    indptr = np.zeros(n_nodes + 1, np.int64)
+    indptr[1:] = np.cumsum(deg)
+    indices = rng.integers(0, n_nodes, size=int(indptr[-1]), dtype=np.int64)
+    return indptr, indices

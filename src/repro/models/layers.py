@@ -1,0 +1,505 @@
+"""Shared model-building blocks (flax-free functional modules).
+
+Parameters are plain nested dicts of arrays. Every parameter carries a
+parallel *logical-axis* annotation tree (same structure, tuples of axis
+names) that distributed/sharding.py maps onto mesh axes per parallelism
+strategy (TP/FSDP/EP). ``Builder`` keeps init code terse and builds both
+trees at once.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+Axes = dict[str, Any]
+
+
+class Builder:
+    """Collects (param, logical-axes) pairs under one rng."""
+
+    def __init__(self, key: jax.Array, param_dtype=jnp.float32):
+        self.key = key
+        self.dtype = param_dtype
+        self.params: Params = {}
+        self.axes: Axes = {}
+
+    def _next(self) -> jax.Array:
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def normal(self, name: str, shape, axes, stddev: float | None = None):
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        std = stddev if stddev is not None else 1.0 / math.sqrt(fan_in)
+        self.params[name] = (jax.random.normal(self._next(), shape, jnp.float32)
+                             * std).astype(self.dtype)
+        self.axes[name] = tuple(axes)
+        return self
+
+    def zeros(self, name: str, shape, axes, dtype=None):
+        self.params[name] = jnp.zeros(shape, dtype or self.dtype)
+        self.axes[name] = tuple(axes)
+        return self
+
+    def ones(self, name: str, shape, axes):
+        self.params[name] = jnp.ones(shape, self.dtype)
+        self.axes[name] = tuple(axes)
+        return self
+
+    def sub(self, name: str, params: Params, axes: Axes):
+        self.params[name] = params
+        self.axes[name] = axes
+        return self
+
+    def build(self) -> tuple[Params, Axes]:
+        return self.params, self.axes
+
+
+def stack_layers(key: jax.Array, n_layers: int, make_one):
+    """vmap-init n identical layers into stacked params (leading 'layers' axis).
+
+    ``make_one(key) -> (params, axes)``. The stacked tree feeds lax.scan.
+    """
+    keys = jax.random.split(key, n_layers)
+    _, axes = make_one(keys[0])  # structure probe (cheap at trace time)
+    stacked = jax.vmap(lambda k: make_one(k)[0])(keys)
+    axes = jax.tree.map(lambda a: ("layers",) + a, axes,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    return stacked, axes
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm with a custom VJP: math in fp32, but cotangents are emitted
+    in the input dtype — default AD re-materializes an fp32 [B,S,d]
+    cotangent per norm per layer (~2.3e13 B/step at deepseek-v3 train
+    scale; EXPERIMENTS.md §Perf cell A)."""
+    return _rms_fwd(x, scale, eps)[0]
+
+
+def _rms_fwd(x, scale, eps):
+    x32 = x.astype(jnp.float32)
+    r = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    out = (x32 * r * scale.astype(jnp.float32)).astype(x.dtype)
+    return out, (x, scale, r)
+
+
+def _rms_bwd(eps, res, g):
+    x, scale, r = res
+    x32 = x.astype(jnp.float32)
+    gw = g.astype(jnp.float32) * scale.astype(jnp.float32)
+    xhat = x32 * r
+    dx = r * (gw - xhat * jnp.mean(gw * xhat, axis=-1, keepdims=True))
+    dscale = jnp.sum((g.astype(jnp.float32) * xhat).reshape(-1, x.shape[-1]),
+                     axis=0)
+    return dx.astype(x.dtype), dscale.astype(scale.dtype)
+
+
+rms_norm.defvjp(_rms_fwd, _rms_bwd)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float = 10_000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10_000.0):
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(angles)[..., None, :]                      # [..., S, 1, D/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA + optional sliding window; full-matrix and decode forms)
+# ---------------------------------------------------------------------------
+def gqa_attention(
+    q: jnp.ndarray,            # [B, Sq, H, D]
+    k: jnp.ndarray,            # [B, Sk, KV, D]
+    v: jnp.ndarray,            # [B, Sk, KV, D]
+    *,
+    q_positions: jnp.ndarray,  # [B, Sq]
+    k_positions: jnp.ndarray,  # [B, Sk]
+    causal: bool = True,
+    window: int | None = None,  # sliding-window size (None = full)
+    k_valid: jnp.ndarray | None = None,  # [B, Sk] cache-slot validity
+    softmax_scale: float | None = None,
+) -> jnp.ndarray:
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    scale = softmax_scale or (1.0 / math.sqrt(D))
+
+    qg = q.reshape(B, Sq, KV, g, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale  # [B, KV, g, Sq, Sk]
+
+    pq = q_positions[:, None, None, :, None]
+    pk = k_positions[:, None, None, None, :]
+    mask = jnp.ones_like(s, dtype=bool)
+    if causal:
+        mask &= pk <= pq
+    if window is not None:
+        mask &= pq - pk < window
+    if k_valid is not None:
+        mask &= k_valid[:, None, None, None, :]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU family)
+# ---------------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> tuple[Params, Axes]:
+    b = Builder(key, dtype)
+    b.normal("w_gate", (d_model, d_ff), ("embed", "mlp"))
+    b.normal("w_up", (d_model, d_ff), ("embed", "mlp"))
+    b.normal("w_down", (d_ff, d_model), ("mlp", "embed"))
+    return b.build()
+
+
+def mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (shared + fine-grained routed; sort-based dispatch)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int            # routed experts E
+    num_shared: int             # shared (always-on) experts
+    top_k: int
+    d_model: int
+    d_ff: int                   # per-expert hidden
+    router: str = "softmax_topk"   # "softmax_topk" | "sigmoid_norm" (dsv3)
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.001
+    route_scale: float = 1.0
+    # Dispatch locality: tokens are dispatched inside fixed-size groups so the
+    # sort/cumsum slotting never crosses data shards under pjit (t5x-style).
+    tokens_per_group: int = 4096
+
+
+def init_moe(key, cfg: MoEConfig, dtype) -> tuple[Params, Axes]:
+    b = Builder(key, dtype)
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    b.normal("router", (d, e), ("embed", "experts"), stddev=0.02)
+    b.zeros("router_bias", (e,), ("experts",), jnp.float32)  # dsv3 aux-free bias
+    b.normal("w_gate", (e, d, f), ("experts", "embed", "mlp"))
+    b.normal("w_up", (e, d, f), ("experts", "embed", "mlp"))
+    b.normal("w_down", (e, f, d), ("experts", "mlp", "embed"))
+    if cfg.num_shared:
+        sp, sa = init_mlp(jax.random.fold_in(key, 7), d,
+                          cfg.d_ff * cfg.num_shared, dtype)
+        b.sub("shared", sp, sa)
+    return b.build()
+
+
+def _constrain(x: jnp.ndarray, axes: tuple) -> jnp.ndarray:
+    """Best-effort sharding constraint: dims whose mesh axis exists and
+    divides evenly are constrained; silently a no-op outside a mesh context
+    (smoke tests, single device)."""
+    try:
+        from jax.sharding import PartitionSpec as PS
+        import jax.numpy as _j  # noqa
+
+        mesh = jax._src.mesh.thread_resources.env.physical_mesh
+        if mesh.empty:
+            return x
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        parts = []
+        for dim, name in enumerate(axes):
+            if name in sizes and x.shape[dim] % sizes[name] == 0:
+                parts.append(name)
+            else:
+                parts.append(None)
+        return jax.lax.with_sharding_constraint(x, PS(*parts))
+    except Exception:
+        return x
+
+
+def _route(p: Params, x: jnp.ndarray, cfg: MoEConfig):
+    """Router scores: returns (gate weights [T,K], expert ids [T,K], probs [T,E])."""
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    if cfg.router == "sigmoid_norm":               # DeepSeek-V3
+        scores = jax.nn.sigmoid(logits)
+        sel = scores + p["router_bias"][None, :]   # aux-loss-free bias: select
+        _, ids = jax.lax.top_k(sel, cfg.top_k)
+        gw = jnp.take_along_axis(scores, ids, axis=1)  # gate with raw scores
+        gw = gw / jnp.maximum(jnp.sum(gw, axis=1, keepdims=True), 1e-9)
+        gw = gw * cfg.route_scale
+        probs = scores / jnp.maximum(scores.sum(1, keepdims=True), 1e-9)
+    else:                                          # classic softmax top-k
+        probs = jax.nn.softmax(logits, axis=1)
+        gw, ids = jax.lax.top_k(probs, cfg.top_k)
+    return gw, ids, probs
+
+
+def _dispatch_group(x: jnp.ndarray, gw: jnp.ndarray, ids: jnp.ndarray,
+                    E: int, C: int):
+    """Slot one token group's assignments into [E, C] buffers (sort-based;
+    no [T,E] one-hot). x: [Tg, d]; gw/ids: [Tg, K]."""
+    Tg, K = ids.shape
+    flat_e = ids.reshape(-1)                                  # [Tg*K]
+    flat_t = jnp.repeat(jnp.arange(Tg, dtype=jnp.int32), K)
+    flat_w = gw.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    counts = jax.ops.segment_sum(jnp.ones_like(se, jnp.int32), se,
+                                 num_segments=E)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(Tg * K, dtype=jnp.int32) - starts[se]    # slot in expert
+
+    tok_buf = jnp.full((E, C), Tg, jnp.int32).at[se, pos].set(st, mode="drop")
+    gate_buf = jnp.zeros((E, C), jnp.float32).at[se, pos].set(sw, mode="drop")
+    xpad = jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)], axis=0)
+    return xpad[tok_buf], tok_buf, gate_buf                   # [E,C,d], ...
+
+
+def moe_ffn(p: Params, x: jnp.ndarray, cfg: MoEConfig):
+    """Capacity-bounded top-k MoE, group-local dispatch (EP-shardable).
+
+    x: [T, d] (callers flatten batch×seq). Returns ([T, d], aux_loss).
+
+    Tokens are split into G groups of <= tokens_per_group; the sort/cumsum
+    slotting runs *inside* each group (vmapped), so under pjit the group
+    axis shards over the data axes and slotting never needs a cross-shard
+    sort. The grouped-GEMM einsum carries the expert axis — shardable over
+    the model axis (EP); the combine segment-sum lowers to the EP
+    all-reduce.
+    """
+    T, d = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    G = max(1, T // max(cfg.tokens_per_group, 1))
+    while T % G:
+        G -= 1
+    Tg = T // G
+    C = max(8, int(cfg.capacity_factor * Tg * K / E))
+
+    gw, ids, probs = _route(p, x, cfg)
+
+    # Switch-style load-balance aux loss (global).
+    load = jnp.zeros((E,), jnp.float32).at[ids.reshape(-1)].add(1.0) / (T * K)
+    imp = jnp.mean(probs, axis=0)
+    aux = cfg.aux_loss_weight * E * jnp.sum(load * imp)
+
+    xg = x.reshape(G, Tg, d)
+    disp, tok_buf, gate_buf = jax.vmap(
+        lambda xi, wi, ii: _dispatch_group(xi, wi, ii, E, C)
+    )(xg, gw.reshape(G, Tg, K), ids.reshape(G, Tg, K))        # [G,E,C,d]
+
+    # EP sharding: groups over data, experts over model. Without the
+    # constraint the partitioner replicates the [G,E,C,d] dispatch buffer
+    # (150 GB/layer at deepseek-v3 prefill scale — EXPERIMENTS.md §Perf).
+    disp = _constrain(disp, ("data", "model", None, None))
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", disp, p["w_gate"])) \
+        * jnp.einsum("gecd,edf->gecf", disp, p["w_up"])
+    h = _constrain(h, ("data", "model", None, None))
+    out = jnp.einsum("gecf,efd->gecd", h, p["w_down"])        # [G,E,C,d]
+    out = _constrain(out, ("data", "model", None, None))
+
+    def combine(out_g, tok_g, gate_g):
+        contrib = (out_g.astype(jnp.float32)
+                   * gate_g[..., None]).reshape(E * C, d)
+        return jax.ops.segment_sum(contrib, tok_g.reshape(E * C),
+                                   num_segments=Tg + 1)[:Tg]
+
+    y = jax.vmap(combine)(out, tok_buf, gate_buf).reshape(T, d).astype(x.dtype)
+
+    if cfg.num_shared:
+        y = y + mlp(p["shared"], x)
+    return y, aux
+
+
+def router_bias_update(p: Params, load: jnp.ndarray, lr: float = 0.001) -> Params:
+    """DeepSeek-V3 aux-loss-free balancing: nudge under-loaded experts up."""
+    target = jnp.mean(load)
+    new_bias = p["router_bias"] + lr * jnp.sign(target - load)
+    return {**p, "router_bias": new_bias}
+
+
+# ---------------------------------------------------------------------------
+# Multi-head Latent Attention (DeepSeek-V2/V3)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10_000.0
+
+
+def init_mla(key, cfg: MLAConfig, dtype) -> tuple[Params, Axes]:
+    b = Builder(key, dtype)
+    d, h = cfg.d_model, cfg.n_heads
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    b.normal("wq_a", (d, qr), ("embed", "q_lora"))
+    b.ones("q_norm", (qr,), ("q_lora",))
+    b.normal("wq_b", (qr, h, qd), ("q_lora", "heads", "head_dim"))
+    b.normal("wkv_a", (d, kr + cfg.qk_rope_dim), ("embed", "kv_lora"))
+    b.ones("kv_norm", (kr,), ("kv_lora",))
+    b.normal("wk_b", (kr, h, cfg.qk_nope_dim), ("kv_lora", "heads", "head_dim"))
+    b.normal("wv_b", (kr, h, cfg.v_head_dim), ("kv_lora", "heads", "head_dim"))
+    b.normal("wo", (h, cfg.v_head_dim, d), ("heads", "head_dim", "embed"))
+    return b.build()
+
+
+def mla_attention(p: Params, cfg: MLAConfig, x: jnp.ndarray,
+                  positions: jnp.ndarray, causal: bool = True,
+                  attn_chunk: int = 512, use_flash: bool = False):
+    """Training/prefill form: latents materialized per-head. x: [B, S, d].
+
+    Attention is q-chunked (scan) so the [S, S] score matrix never
+    materializes — at 32k prefill an unchunked MLA would need TBs of HBM
+    for the per-head score tensor (EXPERIMENTS.md §Perf, iteration 0).
+    """
+    B, S, _ = x.shape
+    h = cfg.n_heads
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+
+    q_lat = rms_norm(x @ p["wq_a"], p["q_norm"])              # [B,S,qr]
+    q = jnp.einsum("bsr,rhd->bshd", q_lat, p["wq_b"])         # [B,S,H,nope+rope]
+    q_nope = q[..., : cfg.qk_nope_dim]
+    q_rope = apply_rope(q[..., cfg.qk_nope_dim:], positions, cfg.rope_theta)
+
+    kv_all = x @ p["wkv_a"]                                   # [B,S,kr+rope]
+    c_kv = rms_norm(kv_all[..., : cfg.kv_lora_rank], p["kv_norm"])
+    k_rope = apply_rope(kv_all[..., None, cfg.kv_lora_rank:], positions,
+                        cfg.rope_theta)                       # [B,S,1,rope]
+    k_nope = jnp.einsum("bsr,rhd->bshd", c_kv, p["wk_b"])
+    v = jnp.einsum("bsr,rhd->bshd", c_kv, p["wv_b"])
+
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, h, cfg.qk_rope_dim))], axis=-1)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    if use_flash and S > 1:
+        from repro.models.flash_attention import flash_attention
+        out = flash_attention(qf, k, v, positions, positions, causal, None,
+                              scale, 512)
+        return jnp.einsum("bshd,hdo->bso", out, p["wo"])
+    cq = min(attn_chunk, S)
+    while S % cq:
+        cq -= 1
+    if S <= cq:
+        out = gqa_attention(qf, k, v, q_positions=positions,
+                            k_positions=positions, causal=causal,
+                            softmax_scale=scale)
+    else:
+        qc = qf.reshape(B, S // cq, cq, h, -1).swapaxes(0, 1)
+        pc = positions.reshape(B, S // cq, cq).swapaxes(0, 1)
+
+        def chunk(_, xs):
+            qi, pi = xs
+            return None, gqa_attention(
+                qi, k, v, q_positions=pi, k_positions=positions,
+                causal=causal, softmax_scale=scale)
+
+        _, oc = jax.lax.scan(chunk, None, (qc, pc))
+        out = oc.swapaxes(0, 1).reshape(B, S, h, cfg.v_head_dim)
+    return jnp.einsum("bshd,hdo->bso", out, p["wo"])
+
+
+def mla_decode(p: Params, cfg: MLAConfig, x: jnp.ndarray,
+               cache_ckv: jnp.ndarray, cache_krope: jnp.ndarray,
+               position: jnp.ndarray, cache_len: jnp.ndarray):
+    """Absorbed-matrix decode over the compressed latent cache.
+
+    x: [B, 1, d]; cache_ckv: [B, S, kr]; cache_krope: [B, S, rope].
+    Scores are computed in latent space: q_nope is absorbed through wk_b
+    (per-head rank-kr projection) so the per-token cache stays (kr + rope).
+    """
+    B = x.shape[0]
+    S = cache_ckv.shape[1]
+    h = cfg.n_heads
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+
+    q_lat = rms_norm(x @ p["wq_a"], p["q_norm"])
+    q = jnp.einsum("bsr,rhd->bshd", q_lat, p["wq_b"])[:, 0]   # [B,H,qd]
+    q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    q_rope = apply_rope(q_rope[:, None], position[:, None],
+                        cfg.rope_theta)[:, 0]                 # [B,H,rope]
+
+    kv_all = x[:, 0] @ p["wkv_a"]
+    c_new = rms_norm(kv_all[..., : cfg.kv_lora_rank], p["kv_norm"])
+    kr_new = apply_rope(kv_all[:, None, None, cfg.kv_lora_rank:],
+                        position[:, None], cfg.rope_theta)[:, 0, 0]
+
+    slot = cache_len  # [B] write position
+    # one-hot masked update (local per shard; dynamic scatter would force a
+    # cache re-partition each step — §Perf cell B)
+    hot = (jnp.arange(S)[None, :] == slot[:, None])[..., None]
+    cache_ckv = jnp.where(hot, c_new[:, None], cache_ckv)
+    cache_krope = jnp.where(hot, kr_new[:, None], cache_krope)
+
+    # absorb q_nope through wk_b: [B,H,kr]
+    q_abs = jnp.einsum("bhd,rhd->bhr", q_nope.astype(jnp.float32),
+                       p["wk_b"].astype(jnp.float32))
+    s = (jnp.einsum("bhr,bsr->bhs", q_abs, cache_ckv.astype(jnp.float32))
+         + jnp.einsum("bhd,bsd->bhs", q_rope.astype(jnp.float32),
+                      cache_krope.astype(jnp.float32))) * scale
+    valid = jnp.arange(S)[None, :] <= slot[:, None]
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", pr, cache_ckv.astype(jnp.float32))
+    out = jnp.einsum("bhr,rhd->bhd", o_lat, p["wv_b"].astype(jnp.float32))
+    y = jnp.einsum("bhd,hdo->bo", out, p["wo"].astype(jnp.float32))
+    return y[:, None].astype(x.dtype), cache_ckv, cache_krope
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / projections
+# ---------------------------------------------------------------------------
+def init_embedding(key, vocab: int, d_model: int, dtype,
+                   tied: bool = False) -> tuple[Params, Axes]:
+    b = Builder(key, dtype)
+    b.normal("embedding", (vocab, d_model), ("vocab", "embed"), stddev=0.02)
+    if not tied:
+        b.normal("unembed", (d_model, vocab), ("embed", "vocab"), stddev=0.02)
+    return b.build()
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Token-mean CE in fp32; labels == -100 are ignored."""
+    logits = logits.astype(jnp.float32)
+    valid = labels >= 0 if mask is None else mask
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0] - logz
+    n = jnp.maximum(jnp.sum(valid), 1)
+    return -jnp.sum(jnp.where(valid, ll, 0.0)) / n

@@ -1,0 +1,529 @@
+"""RecSys architecture family: MIND, BERT4Rec, DIEN, FM.
+
+The hot path is the huge sparse embedding table (10^6–10^7 rows): lookups
+are jnp.take / EmbeddingBag (kernels/bag) over row-sharded tables; the
+``retrieval_cand`` shape (1 query × 1,000,000 candidates) is a batched-dot
+MIPS over the full item table — the same retrieval op as the streaming-RAG
+index (kernels/mips), which is exactly why this family is assigned to this
+paper (DESIGN.md §4).
+
+Training losses: CTR BCE (FM, DIEN) and sampled softmax (BERT4Rec, MIND)
+with shared in-batch negatives — full 1M-way softmax at batch 65,536 would
+be a [65536·200, 10^6] logits matrix; sampled softmax is the standard
+substitute (Covington et al., RecSys'16).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bag.ops import embedding_bag
+from repro.kernels.mips.ref import mips_topk_ref
+from repro.models import layers as L
+from repro.models.api import Arch, ShapeDef, StepSpec, sds
+from repro.train import optimizer as opt_lib
+
+RECSYS_SHAPES = {
+    "train_batch": ShapeDef("train_batch", "train", (("batch", 65536),)),
+    "serve_p99": ShapeDef("serve_p99", "serve", (("batch", 512),)),
+    "serve_bulk": ShapeDef("serve_bulk", "serve", (("batch", 262144),)),
+    "retrieval_cand": ShapeDef("retrieval_cand", "retrieval",
+                               (("batch", 1), ("n_candidates", 1_000_000))),
+}
+
+N_ITEMS = 1_000_000          # item vocabulary (huge-embedding regime)
+N_NEG = 512                  # sampled-softmax negatives
+
+
+def _mlp_tower(key, dims, dtype, prefix="mlp"):
+    b = L.Builder(key, dtype)
+    for i in range(len(dims) - 1):
+        b.normal(f"{prefix}_w{i}", (dims[i], dims[i + 1]), ("rs_in", "rs_out"))
+        b.zeros(f"{prefix}_b{i}", (dims[i + 1],), ("rs_out",))
+    return b.build()
+
+
+def _mlp_run(p, x, n, prefix="mlp", final_act=False):
+    for i in range(n):
+        x = x @ p[f"{prefix}_w{i}"] + p[f"{prefix}_b{i}"]
+        if i < n - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _sampled_softmax(user_vec, target, item_table, key):
+    """Shared-negative sampled softmax: own positive + N shared negatives.
+    (In-batch negatives at global batch 65,536 would build a [B, B+N]
+    logits matrix — 1.1 GB/device of pure HBM traffic; §Perf cell C.)"""
+    negs = jax.random.randint(key, (N_NEG,), 0, item_table.shape[0])
+    pos = jnp.sum(user_vec * item_table[target], axis=-1, keepdims=True)
+    neg = user_vec @ item_table[negs].T               # [B, N]
+    logits = jnp.concatenate([pos, neg], axis=1)      # [B, 1+N]
+    labels = jnp.zeros((logits.shape[0],), jnp.int32)
+    return L.cross_entropy(logits[None], labels[None])
+
+
+class RecSysArch(Arch):
+    """Shared scaffolding: shapes, step plumbing, retrieval MIPS."""
+
+    hist_len: int = 50
+    embed_dim: int = 64
+
+    def __init__(self, optimizer: opt_lib.OptimizerConfig | None = None):
+        self.shapes = dict(RECSYS_SHAPES)
+        if optimizer is not None:
+            self.optimizer = optimizer
+
+    def init(self, key):
+        return self._init(key)[0]
+
+    def init_with_axes(self, key, box):
+        p, a = self._init(key)
+        box["axes"] = a
+        return p
+
+    # subclasses implement: _init, user_vectors(params, batch) -> [B, I?, d],
+    # score(params, batch) -> [B] logits, loss(params, batch)
+    def user_vectors(self, params, batch):
+        raise NotImplementedError
+
+    def retrieve(self, params, batch, k: int = 100):
+        """1 query vs the full item table: exact MIPS + top-k."""
+        u = self.user_vectors(params, batch)          # [B, I, d]
+        table = params["item_emb"]
+        valid = jnp.ones((table.shape[0],), bool)
+        B, I, d = u.shape
+        scores, ids = mips_topk_ref(u.reshape(B * I, d), table, valid, k)
+        # multi-interest: max-combine per query
+        scores = scores.reshape(B, I, k)
+        ids = ids.reshape(B, I, k)
+        flat = scores.reshape(B, I * k)
+        top, pos = jax.lax.top_k(flat, k)
+        return top, jnp.take_along_axis(ids.reshape(B, I * k), pos, axis=1)
+
+    def _hist_specs(self, B):
+        return {
+            "hist": sds((B, self.hist_len), jnp.int32),
+            "hist_mask": sds((B, self.hist_len), jnp.bool_),
+            "target": sds((B,), jnp.int32),
+            "labels": sds((B,), jnp.float32),
+            "rng": sds((2,), jnp.uint32),
+        }
+
+    _HIST_AXES = {
+        "hist": ("batch", None), "hist_mask": ("batch", None),
+        "target": ("batch",), "labels": ("batch",), "rng": (None,),
+    }
+
+    def step(self, shape_name: str) -> StepSpec:
+        sh = self.shapes[shape_name]
+        B = sh.dim("batch")
+        if sh.kind == "train":
+            fn = self.make_train_step()
+            return StepSpec(fn, self._hist_specs(B), dict(self._HIST_AXES),
+                            "train")
+        if sh.kind == "retrieval":
+            def fn(params, batch):
+                return self.retrieve(params, batch)
+            specs = self._hist_specs(B)
+            specs.pop("labels")
+            axes = {k: v for k, v in self._HIST_AXES.items() if k != "labels"}
+            return StepSpec(fn, specs, axes, "serve")
+
+        def fn(params, batch):
+            return self.score(params, batch)
+        return StepSpec(fn, self._hist_specs(B), dict(self._HIST_AXES), "serve")
+
+
+# -----------------------------------------------------------------------------
+# MIND — multi-interest capsule routing (Li et al., arXiv:1904.08030)
+# -----------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MINDConfig:
+    name: str = "mind"
+    embed_dim: int = 64
+    n_interests: int = 4
+    capsule_iters: int = 3
+    hist_len: int = 50
+    n_items: int = N_ITEMS
+    param_dtype: Any = jnp.float32
+
+
+class MIND(RecSysArch):
+    def __init__(self, cfg: MINDConfig = MINDConfig(), **kw):
+        self.cfg = cfg
+        self.name = cfg.name
+        self.hist_len = cfg.hist_len
+        self.embed_dim = cfg.embed_dim
+        super().__init__(**kw)
+
+    def _init(self, key):
+        cfg = self.cfg
+        b = L.Builder(key, cfg.param_dtype)
+        d = cfg.embed_dim
+        b.normal("item_emb", (cfg.n_items, d), ("item_vocab", "rs_feat"),
+                 stddev=0.02)
+        b.normal("bilinear", (d, d), ("rs_in", "rs_out"))  # B2I capsule map
+        # label-aware attention pow + profile projection (bag feature)
+        b.normal("profile_proj", (d, d), ("rs_in", "rs_out"))
+        return b.build()
+
+    def _interests(self, params, hist_emb, mask):
+        """Dynamic routing B2I: hist_emb [B,S,d] -> interests [B,I,d]."""
+        cfg = self.cfg
+        B, S, d = hist_emb.shape
+        ncap = cfg.n_interests
+        beh = hist_emb @ params["bilinear"]                 # [B,S,d]
+        # routing logits initialized deterministically from content (stable
+        # under jit; the paper uses random init + freeze)
+        logits = jnp.einsum("bsd,bd->bs", beh,
+                            jnp.mean(beh, 1))[..., None]    # [B,S,1]
+        logits = jnp.broadcast_to(logits, (B, S, ncap)) * \
+            (1.0 + jnp.arange(ncap, dtype=jnp.float32) / ncap)
+        m = mask.astype(jnp.float32)[..., None]
+        caps = None
+        for _ in range(cfg.capsule_iters):
+            w = jax.nn.softmax(logits, axis=-1) * m         # [B,S,I]
+            caps = jnp.einsum("bsi,bsd->bid", w, beh)       # [B,I,d]
+            # squash
+            n2 = jnp.sum(caps * caps, -1, keepdims=True)
+            caps = caps * (n2 / (1 + n2)) / jnp.sqrt(n2 + 1e-9)
+            logits = logits + jnp.einsum("bsd,bid->bsi", beh, caps)
+        return caps
+
+    def user_vectors(self, params, batch):
+        hist_emb = params["item_emb"][batch["hist"]]
+        caps = self._interests(params, hist_emb, batch["hist_mask"])
+        # ragged profile feature via EmbeddingBag (mean over valid history)
+        B, S = batch["hist"].shape
+        seg = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[:, None],
+                               (B, S)).reshape(-1)
+        idx = jnp.where(batch["hist_mask"], batch["hist"], 0).reshape(-1)
+        w = batch["hist_mask"].astype(jnp.float32).reshape(-1)
+        prof = embedding_bag(params["item_emb"], idx, seg, B, w, "mean")
+        prof = (prof @ params["profile_proj"])[:, None]     # [B,1,d]
+        return caps + 0.1 * prof                            # broadcast add
+
+    def score(self, params, batch):
+        u = self.user_vectors(params, batch)                # [B,I,d]
+        t = params["item_emb"][batch["target"]]             # [B,d]
+        return jnp.max(jnp.einsum("bid,bd->bi", u, t), axis=1)
+
+    def loss(self, params, batch, key=None):
+        u = self.user_vectors(params, batch)                # [B,I,d]
+        t = params["item_emb"][batch["target"]]
+        # label-aware attention (pow 2) combines interests per target
+        att = jax.nn.softmax(jnp.einsum("bid,bd->bi", u, t) * 2.0, axis=1)
+        uv = jnp.einsum("bi,bid->bd", att, u)
+        k = jax.random.wrap_key_data(batch["rng"].astype(jnp.uint32))
+        ce = _sampled_softmax(uv, batch["target"], params["item_emb"], k)
+        return ce, {"ce": ce}
+
+
+# -----------------------------------------------------------------------------
+# BERT4Rec — bidirectional seq model (Sun et al., arXiv:1904.06690)
+# -----------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class BERT4RecConfig:
+    name: str = "bert4rec"
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    seq_len: int = 200
+    n_items: int = N_ITEMS
+    mask_frac: float = 0.15
+    param_dtype: Any = jnp.float32
+
+
+class BERT4Rec(RecSysArch):
+    def __init__(self, cfg: BERT4RecConfig = BERT4RecConfig(), **kw):
+        self.cfg = cfg
+        self.name = cfg.name
+        self.hist_len = cfg.seq_len
+        self.embed_dim = cfg.embed_dim
+        super().__init__(**kw)
+
+    def _init(self, key):
+        cfg = self.cfg
+        d = cfg.embed_dim
+        b = L.Builder(key, cfg.param_dtype)
+        ks = jax.random.split(key, 4)
+        b.normal("item_emb", (cfg.n_items + 1, d), ("item_vocab", "rs_feat"),
+                 stddev=0.02)  # +1 = [MASK]
+        b.normal("pos_emb", (cfg.seq_len, d), (None, "rs_feat"), stddev=0.02)
+
+        def blk(k):
+            bb = L.Builder(k, cfg.param_dtype)
+            k1, k2 = jax.random.split(k)
+            hd = d // cfg.n_heads
+            bb.normal("wq", (d, cfg.n_heads, hd), ("embed", "heads", "head_dim"))
+            bb.normal("wk", (d, cfg.n_heads, hd), ("embed", "heads", "head_dim"))
+            bb.normal("wv", (d, cfg.n_heads, hd), ("embed", "heads", "head_dim"))
+            bb.normal("wo", (cfg.n_heads, hd, d), ("heads", "head_dim", "embed"))
+            mp, ma = L.init_mlp(k2, d, 4 * d, cfg.param_dtype)
+            bb.sub("mlp", mp, ma)
+            bb.ones("ln1", (d,), ("embed",))
+            bb.ones("ln2", (d,), ("embed",))
+            return bb.build()
+
+        sp, sa = L.stack_layers(ks[1], cfg.n_blocks, blk)
+        b.sub("blocks", sp, sa)
+        b.ones("final_norm", (d,), ("embed",))
+        return b.build()
+
+    def encode(self, params, hist, mask):
+        cfg = self.cfg
+        x = params["item_emb"][hist] + params["pos_emb"][None]
+
+        def step(carry, p_l):
+            h = L.rms_norm(carry, p_l["ln1"])
+            q = jnp.einsum("bsd,dhk->bshk", h, p_l["wq"])
+            k = jnp.einsum("bsd,dhk->bshk", h, p_l["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", h, p_l["wv"])
+            s = jnp.einsum("bqhd,bshd->bhqs", q, k) / jnp.sqrt(
+                jnp.float32(q.shape[-1]))
+            s = jnp.where(mask[:, None, None, :], s, -1e30)
+            o = jnp.einsum("bhqs,bshd->bqhd", jax.nn.softmax(s, -1), v)
+            xc = carry + jnp.einsum("bqhd,hdo->bqo", o, p_l["wo"])
+            h2 = L.rms_norm(xc, p_l["ln2"])
+            return xc + L.mlp(p_l["mlp"], h2), None
+
+        x, _ = jax.lax.scan(step, x, params["blocks"])
+        return L.rms_norm(x, params["final_norm"])
+
+    def user_vectors(self, params, batch):
+        h = self.encode(params, batch["hist"], batch["hist_mask"])
+        return h[:, -1:, :]  # last position = next-item query vector
+
+    def score(self, params, batch):
+        u = self.user_vectors(params, batch)[:, 0]
+        return jnp.sum(u * params["item_emb"][batch["target"]], axis=-1)
+
+    def loss(self, params, batch, key=None):
+        """Cloze objective: mask random positions, predict them (sampled)."""
+        cfg = self.cfg
+        hist, hmask = batch["hist"], batch["hist_mask"]
+        B, S = hist.shape
+        k = jax.random.wrap_key_data(batch["rng"].astype(jnp.uint32))
+        k1, k2 = jax.random.split(k)
+        mask_pos = (jax.random.uniform(k1, (B, S)) < cfg.mask_frac) & hmask
+        masked = jnp.where(mask_pos, cfg.n_items, hist)   # [MASK] id
+        h = self.encode(params, masked, hmask)
+        # gather one masked position per row (first masked, else last valid)
+        idx = jnp.argmax(mask_pos, axis=1)
+        uv = h[jnp.arange(B), idx]
+        tgt = hist[jnp.arange(B), idx]
+        ce = _sampled_softmax(uv, tgt, params["item_emb"][: cfg.n_items], k2)
+        return ce, {"ce": ce}
+
+
+# -----------------------------------------------------------------------------
+# DIEN — interest evolution w/ AUGRU (Zhou et al., arXiv:1809.03672)
+# -----------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DIENConfig:
+    name: str = "dien"
+    embed_dim: int = 18
+    seq_len: int = 100
+    gru_dim: int = 108
+    mlp_dims: tuple[int, ...] = (200, 80)
+    n_items: int = N_ITEMS
+    param_dtype: Any = jnp.float32
+
+
+def _init_gru(key, d_in, d_h, dtype, prefix):
+    b = L.Builder(key, dtype)
+    b.normal(f"{prefix}_wx", (d_in, 3 * d_h), ("rs_in", "rs_out"))
+    b.normal(f"{prefix}_wh", (d_h, 3 * d_h), ("rs_in", "rs_out"))
+    b.zeros(f"{prefix}_b", (3 * d_h,), ("rs_out",))
+    return b.build()
+
+
+def _gru_cell(p, prefix, x, h):
+    g = h.shape[-1]
+    gx = x @ p[f"{prefix}_wx"] + p[f"{prefix}_b"]
+    gh = h @ p[f"{prefix}_wh"]
+    z = jax.nn.sigmoid(gx[..., :g] + gh[..., :g])
+    r = jax.nn.sigmoid(gx[..., g:2 * g] + gh[..., g:2 * g])
+    n = jnp.tanh(gx[..., 2 * g:] + r * gh[..., 2 * g:])
+    return (1 - z) * n + z * h
+
+
+class DIEN(RecSysArch):
+    def __init__(self, cfg: DIENConfig = DIENConfig(), **kw):
+        self.cfg = cfg
+        self.name = cfg.name
+        self.hist_len = cfg.seq_len
+        self.embed_dim = cfg.embed_dim
+        super().__init__(**kw)
+
+    def _init(self, key):
+        cfg = self.cfg
+        b = L.Builder(key, cfg.param_dtype)
+        ks = jax.random.split(key, 5)
+        d, g = cfg.embed_dim, cfg.gru_dim
+        b.normal("item_emb", (cfg.n_items, d), ("item_vocab", "rs_feat"),
+                 stddev=0.02)
+        g1, a1 = _init_gru(ks[0], d, g, cfg.param_dtype, "gru1")
+        b.sub("gru1", g1, a1)
+        g2, a2 = _init_gru(ks[1], g, g, cfg.param_dtype, "augru")
+        b.sub("augru", g2, a2)
+        b.normal("att_w", (g, d), ("rs_in", "rs_out"))  # attention bilinear
+        mlp_dims = (g + d,) + cfg.mlp_dims + (1,)
+        mp, ma = _mlp_tower(ks[2], mlp_dims, cfg.param_dtype)
+        b.sub("mlp", mp, ma)
+        b.normal("retrieval_proj", (g, d), ("rs_in", "rs_out"))
+        return b.build()
+
+    def _interest(self, params, batch):
+        cfg = self.cfg
+        emb = params["item_emb"][batch["hist"]]          # [B,S,d]
+        m = batch["hist_mask"].astype(jnp.float32)
+        B = emb.shape[0]
+        h0 = jnp.zeros((B, cfg.gru_dim), jnp.float32)
+
+        def step1(h, xs):
+            x_t, m_t = xs
+            h_new = _gru_cell(params["gru1"], "gru1", x_t, h)
+            h = jnp.where(m_t[:, None] > 0, h_new, h)
+            return h, h
+
+        _, hs = jax.lax.scan(step1, h0, (emb.swapaxes(0, 1), m.T))
+        hs = hs.swapaxes(0, 1)                           # [B,S,g]
+        return emb, hs, m
+
+    def _evolve(self, params, hs, tgt_emb, m):
+        """AUGRU: attention-scaled update gate."""
+        att = jnp.einsum("bsg,gd,bd->bs", hs, params["att_w"], tgt_emb)
+        att = jax.nn.softmax(jnp.where(m > 0, att, -1e30), axis=1)
+        B, S, g = hs.shape
+        h0 = jnp.zeros((B, g), jnp.float32)
+
+        def step(h, xs):
+            x_t, a_t, m_t = xs
+            h_new = _gru_cell(params["augru"], "augru", x_t, h)
+            h_new = a_t[:, None] * h_new + (1 - a_t[:, None]) * h  # AUGRU
+            h = jnp.where(m_t[:, None] > 0, h_new, h)
+            return h, None
+
+        hT, _ = jax.lax.scan(step, h0, (hs.swapaxes(0, 1), att.T, m.T))
+        return hT                                        # [B,g]
+
+    def score(self, params, batch):
+        tgt = params["item_emb"][batch["target"]]
+        _, hs, m = self._interest(params, batch)
+        hT = self._evolve(params, hs, tgt, m)
+        z = jnp.concatenate([hT, tgt], axis=-1)
+        return _mlp_run(params["mlp"], z, len(self.cfg.mlp_dims) + 1)[:, 0]
+
+    def loss(self, params, batch, key=None):
+        logits = self.score(params, batch)
+        y = batch["labels"]
+        bce = jnp.mean(
+            jnp.maximum(logits, 0) - logits * y
+            + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+        return bce, {"bce": bce}
+
+    def user_vectors(self, params, batch):
+        """Retrieval approximation: project final interest state to item space
+        (two-stage deployment standard; DESIGN.md §4)."""
+        _, hs, m = self._interest(params, batch)
+        last = jnp.sum(hs * m[..., None], 1) / jnp.maximum(
+            jnp.sum(m, 1, keepdims=True), 1.0)
+        return (last @ params["retrieval_proj"])[:, None]
+
+
+# -----------------------------------------------------------------------------
+# FM — factorization machine (Rendle, ICDM'10)
+# -----------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FMConfig:
+    name: str = "fm"
+    n_fields: int = 39
+    embed_dim: int = 10
+    rows_per_field: int = 1_000_000
+    param_dtype: Any = jnp.float32
+
+
+class FM(RecSysArch):
+    def __init__(self, cfg: FMConfig = FMConfig(), **kw):
+        self.cfg = cfg
+        self.name = cfg.name
+        self.embed_dim = cfg.embed_dim
+        super().__init__(**kw)
+        # FM batches are field-index rows, not histories
+        self.shapes = dict(RECSYS_SHAPES)
+
+    @property
+    def vocab(self):
+        return self.cfg.n_fields * self.cfg.rows_per_field
+
+    def _init(self, key):
+        cfg = self.cfg
+        b = L.Builder(key, cfg.param_dtype)
+        b.zeros("w0", (), ())
+        b.normal("w", (self.vocab,), ("item_vocab",), stddev=0.01)
+        b.normal("v", (self.vocab, cfg.embed_dim), ("item_vocab", "rs_feat"),
+                 stddev=0.01)
+        return b.build()
+
+    def _offsets(self):
+        return (jnp.arange(self.cfg.n_fields, dtype=jnp.int32)
+                * self.cfg.rows_per_field)
+
+    def score(self, params, batch):
+        """FM via the O(nk) sum-square trick. batch['fields']: [B, n_fields]."""
+        idx = batch["fields"] + self._offsets()[None, :]
+        lin = params["w0"] + jnp.sum(params["w"][idx], axis=1)
+        v = params["v"][idx]                              # [B,F,k]
+        s = jnp.sum(v, axis=1)
+        pair = 0.5 * jnp.sum(s * s - jnp.sum(v * v, axis=1), axis=-1)
+        return lin + pair
+
+    def loss(self, params, batch, key=None):
+        logits = self.score(params, batch)
+        y = batch["labels"]
+        bce = jnp.mean(jnp.maximum(logits, 0) - logits * y
+                       + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+        return bce, {"bce": bce}
+
+    def retrieve(self, params, batch, k: int = 100):
+        """Candidate scoring reduces to MIPS: score(c) = const + w_c + <Σv, v_c>.
+        Query = [Σ_user v ; 1]; item rows = [v_c ; w_c] over field 0."""
+        cfg = self.cfg
+        idx = batch["fields"] + self._offsets()[None, :]   # user context fields
+        v = params["v"][idx]
+        s = jnp.sum(v, axis=1)                             # [B,k]
+        q = jnp.concatenate([s, jnp.ones((s.shape[0], 1), s.dtype)], axis=1)
+        cand_rows = params["v"][: cfg.rows_per_field]      # field-0 items
+        cand_w = params["w"][: cfg.rows_per_field][:, None]
+        table = jnp.concatenate([cand_rows, cand_w], axis=1)
+        valid = jnp.ones((table.shape[0],), bool)
+        return mips_topk_ref(q, table, valid, k)
+
+    def _fm_specs(self, B):
+        return {
+            "fields": sds((B, self.cfg.n_fields), jnp.int32),
+            "labels": sds((B,), jnp.float32),
+        }
+
+    def step(self, shape_name: str) -> StepSpec:
+        sh = self.shapes[shape_name]
+        B = sh.dim("batch")
+        axes = {"fields": ("batch", None), "labels": ("batch",)}
+        if sh.kind == "train":
+            return StepSpec(self.make_train_step(), self._fm_specs(B), axes,
+                            "train")
+        if sh.kind == "retrieval":
+            def fn(params, batch):
+                return self.retrieve(params, batch)
+            specs = self._fm_specs(B)
+            specs.pop("labels")
+            return StepSpec(fn, specs, {"fields": ("batch", None)}, "serve")
+
+        def fn(params, batch):
+            return self.score(params, batch)
+        return StepSpec(fn, self._fm_specs(B), axes, "serve")

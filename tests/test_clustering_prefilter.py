@@ -1,0 +1,119 @@
+"""Clustering + prefilter unit/property tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import clustering as C, prefilter as P
+
+
+def _mix(rng, n, d=32, T=4, noise=0.1):
+    m = rng.normal(size=(T, d))
+    m /= np.linalg.norm(m, axis=1, keepdims=True)
+    t = rng.integers(0, T, n)
+    eps = rng.normal(size=(n, d))
+    eps /= np.linalg.norm(eps, axis=1, keepdims=True)
+    x = m[t] * (1 - noise) + noise * eps
+    return jnp.asarray(x, jnp.float32), t, m
+
+
+def test_batched_equals_sequential_for_frozen_assignments():
+    """With assignments computed once (frozen centroids), the batched
+    MiniBatchKMeans fold-in telescopes to the sequential η=1/(n+1) rule."""
+    rng = np.random.default_rng(0)
+    x, _, _ = _mix(rng, 64)
+    cfg = C.ClusterConfig(num_clusters=8, dim=32)
+    st0 = C.init(cfg, jax.random.key(0))
+    labels, _ = C.assign(cfg, st0, x)
+    mask = jnp.ones(64, bool)
+    sb = C.update_batched(cfg, st0, x, labels, mask)
+    ss = C.update_sequential(cfg, st0, x, labels, mask)
+    np.testing.assert_allclose(np.asarray(sb.centroids),
+                               np.asarray(ss.centroids), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sb.counts), np.asarray(ss.counts))
+
+
+def test_streaming_reduces_within_cluster_variance():
+    rng = np.random.default_rng(1)
+    cfg = C.ClusterConfig(num_clusters=8, dim=32)
+    state = C.init(cfg, jax.random.key(1))
+    x0, _, _ = _mix(rng, 256)
+    l0, _ = C.assign(cfg, state, x0)
+    v_before = float(C.within_cluster_variance(state, x0, l0))
+    for _ in range(20):
+        xb, _, _ = _mix(rng, 128)
+        lb, _ = C.assign(cfg, state, xb)
+        state = C.update(cfg, state, xb, lb, jnp.ones(128, bool))
+    l1, _ = C.assign(cfg, state, x0)
+    v_after = float(C.within_cluster_variance(state, x0, l1))
+    assert v_after < v_before
+
+
+def test_kmeans_pp_spreads_centroids():
+    rng = np.random.default_rng(2)
+    x, _, m = _mix(rng, 512, T=4, noise=0.05)
+    # D² seeding is probabilistic: overprovision 2x, then coverage of every
+    # mode is near-certain
+    c = C.kmeans_plus_plus(jax.random.key(0), x, 8)
+    sims = np.asarray(c) @ m.T
+    assert (sims.max(axis=0) > 0.9).all()
+
+
+def test_merge_is_count_weighted():
+    a = C.ClusterState(centroids=jnp.ones((2, 4)), counts=jnp.array([3.0, 0.0]))
+    b = C.ClusterState(centroids=jnp.zeros((2, 4)), counts=jnp.array([1.0, 0.0]))
+    m = C.merge(a, b)
+    np.testing.assert_allclose(np.asarray(m.centroids[0]), 0.75)
+    assert float(m.counts[0]) == 4.0
+
+
+# ---------------------------------------------------------------- prefilter
+def test_bases_are_orthonormal():
+    for basis in ["fixed", "random"]:
+        cfg = P.PrefilterConfig(num_vectors=5, dim=64, basis=basis)
+        state = P.init(cfg, jax.random.key(0))
+        g = np.asarray(state.basis) @ np.asarray(state.basis).T
+        np.testing.assert_allclose(g, np.eye(5), atol=1e-4)
+
+
+def test_warmup_pca_basis_catches_corpus_direction():
+    rng = np.random.default_rng(3)
+    g0 = rng.normal(size=64)
+    g0 /= np.linalg.norm(g0)
+    x = rng.normal(size=(256, 64)) + 8 * g0
+    cfg = P.PrefilterConfig(num_vectors=3, dim=64, basis="fixed")
+    state = P.init(cfg, jax.random.key(0), jnp.asarray(x, jnp.float32))
+    assert abs(float(np.asarray(state.basis[0]) @ g0)) > 0.95
+    # sign-aligned: mean projection positive
+    r, _ = P.score(cfg, state, jnp.asarray(x, jnp.float32))
+    assert float(jnp.mean(r)) > 0.2
+
+
+def test_adaptive_basis_refreshes_after_interval():
+    cfg = P.PrefilterConfig(num_vectors=3, dim=32, basis="adaptive",
+                            window=64, update_interval=64)
+    state = P.init(cfg, jax.random.key(0))
+    before = np.asarray(state.basis).copy()
+    rng = np.random.default_rng(4)
+    planted = rng.normal(size=32)
+    planted /= np.linalg.norm(planted)
+    for _ in range(2):
+        x = jnp.asarray(rng.normal(size=(32, 32)) + 6 * planted, jnp.float32)
+        state = P.ingest(cfg, state, x)
+    after = np.asarray(state.basis)
+    assert not np.allclose(before, after)
+    assert abs(after[0] @ planted) > 0.9
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 8), st.integers(8, 64))
+def test_property_scores_bounded(n, d):
+    rng = np.random.default_rng(n * 100 + d)
+    cfg = P.PrefilterConfig(num_vectors=n, dim=d, basis="random")
+    state = P.init(cfg, jax.random.key(0))
+    x = jnp.asarray(rng.normal(size=(16, d)), jnp.float32)
+    r, keep = P.score(cfg, state, x)
+    assert np.all(np.asarray(r) <= 1.0 + 1e-5)
+    assert np.all(np.asarray(r) >= -1.0 - 1e-5)
+    np.testing.assert_array_equal(np.asarray(keep),
+                                  np.asarray(r) >= cfg.alpha)

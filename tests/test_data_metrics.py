@@ -1,0 +1,93 @@
+"""Stream simulators + downstream metrics."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data.qa import exact_match, rouge_l, token_f1
+from repro.data.streams import STREAMS, make_stream, mixed_stream
+
+
+def test_streams_unit_norm_and_labeled():
+    for name in STREAMS:
+        s = make_stream(name, dim=32)
+        b = s.next_batch(64)
+        np.testing.assert_allclose(
+            np.linalg.norm(b["embedding"], axis=1), 1.0, rtol=1e-5)
+        assert b["topic"].min() >= -1
+        # poisson streams emit variable batch sizes; ids are sequential
+        assert b["doc_id"].tolist() == list(range(len(b["doc_id"])))
+
+
+def test_stream_determinism():
+    a = make_stream("reddit", dim=16).next_batch(32)
+    b = make_stream("reddit", dim=16).next_batch(32)
+    np.testing.assert_array_equal(a["embedding"], b["embedding"])
+
+
+def test_burstiness_spikes_popularity():
+    s = make_stream("btc", dim=16)  # burstiness 0.3
+    w0 = s.weights().max()
+    for _ in range(50):
+        s.next_batch(16)
+    assert s.spike.max() >= 1.0  # spikes happen and decay
+
+
+def test_mixed_stream_namespaces_ids():
+    m = mixed_stream(["nyt", "twitter"], dim=16)
+    b1, b2 = m.next_batch(16), m.next_batch(16)
+    assert (b2["doc_id"] >= 10_000_000).all()  # second sub-stream offset
+
+
+def test_anisotropy_gives_positive_mean_cosine():
+    s = make_stream("nyt", dim=64)
+    b = s.next_batch(512)
+    on = b["topic"] >= 0
+    mean_dir = b["embedding"][on].mean(0)
+    mean_dir /= np.linalg.norm(mean_dir)
+    cos = b["embedding"][on] @ mean_dir
+    assert cos.mean() > 0.3  # SBERT-like non-centered geometry
+
+
+# ------------------------------------------------------------------ metrics
+def test_exact_match_and_f1():
+    assert exact_match("3.1", "3.1") == 1.0
+    assert exact_match("3.1", "2.3") == 0.0
+    assert exact_match("", "") == 0.0  # empty ref never counts
+    assert token_f1("value is 3", "value is 4") == 2 / 3
+
+
+def test_rouge_l_known_value():
+    # LCS("a b c d", "a c d e") = "a c d" (3); P=3/4, R=3/4 -> F=0.75
+    assert abs(rouge_l("a b c d", "a c d e") - 0.75) < 1e-9
+    assert rouge_l("", "x") == 0.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.sampled_from("abcd"), min_size=1, max_size=12),
+       st.lists(st.sampled_from("abcd"), min_size=1, max_size=12))
+def test_property_rouge_l_matches_bruteforce_lcs(a, b):
+    import itertools
+
+    def lcs_len(x, y):
+        best = 0
+        for r in range(len(x) + 1):
+            for sub in itertools.combinations(x, r):
+                it = iter(y)
+                if all(c in it for c in sub):
+                    best = max(best, r)
+        return best
+
+    pred, ref = " ".join(a), " ".join(b)
+    lcs = lcs_len(a, b)
+    if lcs == 0:
+        assert rouge_l(pred, ref) == 0.0
+    else:
+        p, r = lcs / len(a), lcs / len(b)
+        assert abs(rouge_l(pred, ref) - 2 * p * r / (p + r)) < 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.text("abc xyz", max_size=20), st.text("abc xyz", max_size=20))
+def test_property_f1_symmetric_bounded(a, b):
+    f = token_f1(a, b)
+    assert 0.0 <= f <= 1.0
+    assert abs(f - token_f1(b, a)) < 1e-9

@@ -1,0 +1,130 @@
+"""Heavy-hitter filter invariants — unit + hypothesis property tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import heavy_hitter as hh
+
+
+def _run(cfg, labels, seed=0):
+    state = hh.init(cfg)
+    state, info = hh.update_batch(cfg, state, jnp.asarray(labels, jnp.int32),
+                                  jax.random.key(seed))
+    return state, info
+
+
+def test_capacity_never_exceeded():
+    cfg = hh.HHConfig(capacity=8, admit_prob=1.0)
+    labels = np.random.default_rng(0).integers(0, 100, 500)
+    state, _ = _run(cfg, labels)
+    assert int(jnp.sum(hh.active_mask(state))) <= 8
+
+
+def test_exact_counts_when_capacity_sufficient():
+    # u irrelevant below capacity (Algorithm 1 admits unconditionally)
+    cfg = hh.HHConfig(capacity=16, admit_prob=0.05)
+    rng = np.random.default_rng(1)
+    labels = rng.integers(0, 10, 400)
+    state, _ = _run(cfg, labels)
+    got = {int(l): int(c) for l, c in zip(state.labels, state.counts)
+           if l >= 0}
+    true = {int(v): int(n) for v, n in
+            zip(*np.unique(labels, return_counts=True))}
+    assert got == true
+
+
+def test_negative_labels_are_noops():
+    cfg = hh.HHConfig(capacity=8)
+    state, _ = _run(cfg, np.full(100, -1))
+    assert int(jnp.sum(hh.active_mask(state))) == 0
+    assert int(state.total_seen) == 0
+
+
+def test_min_eviction_keeps_heavy_labels():
+    cfg = hh.HHConfig(capacity=4, admit_prob=1.0,
+                      policy=hh.Policy.MIN_EVICT)
+    # heavy labels 0,1 interleaved with a parade of singletons
+    rng = np.random.default_rng(2)
+    labels = []
+    for i in range(300):
+        labels += [0, 1, 100 + i]
+    state, _ = _run(cfg, np.array(labels))
+    kept = {int(l) for l in state.labels if l >= 0}
+    assert 0 in kept and 1 in kept
+
+
+def test_space_saving_overestimates():
+    cfg = hh.HHConfig(capacity=4, policy=hh.Policy.SPACE_SAVING)
+    rng = np.random.default_rng(3)
+    labels = rng.zipf(1.5, 600) % 50
+    state, _ = _run(cfg, labels)
+    # Space-Saving guarantee: stored count >= true count for stored labels
+    true = {int(v): int(n) for v, n in
+            zip(*np.unique(labels, return_counts=True))}
+    for l, c in zip(state.labels, state.counts):
+        if int(l) >= 0:
+            assert int(c) >= true.get(int(l), 0)
+
+
+def test_morris_estimates_order_of_magnitude():
+    cfg = hh.HHConfig(capacity=4, morris=True)
+    labels = np.zeros(2000, np.int32)
+    state, _ = _run(cfg, labels)
+    est = float(hh.estimated_counts(cfg, state)[jnp.argmax(
+        state.labels == 0)])
+    assert 200 <= est <= 20000  # 2^c-1 is a coarse, unbiased-ish estimator
+
+
+def test_adaptive_grows_under_novelty():
+    cfg = hh.HHConfig(capacity=16, max_capacity=64, adaptive=True,
+                      window=64, novel_hi=0.3, admit_prob=0.05)
+    labels = np.arange(512)  # all novel
+    state, _ = _run(cfg, labels)
+    assert float(state.admit_prob) > 0.05
+    assert int(state.active_capacity) > 16
+
+
+def test_writes_bounded_by_arrivals():
+    cfg = hh.HHConfig(capacity=8, admit_prob=0.5)
+    labels = np.random.default_rng(5).integers(0, 50, 300)
+    state, _ = _run(cfg, labels)
+    assert int(state.total_writes) <= 300
+    assert int(state.total_evictions) <= int(state.total_writes)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 30), min_size=1, max_size=200),
+       st.sampled_from(list(hh.Policy)),
+       st.integers(2, 12))
+def test_property_capacity_and_membership(labels, policy, capacity):
+    cfg = hh.HHConfig(capacity=capacity, admit_prob=0.3, policy=policy)
+    state, _ = _run(cfg, np.array(labels))
+    occ = hh.active_mask(state)
+    # invariant 1: bounded state
+    assert int(jnp.sum(occ)) <= capacity
+    # invariant 2: no duplicate live labels
+    live = [int(l) for l, o in zip(state.labels, occ) if bool(o)]
+    assert len(live) == len(set(live))
+    # invariant 3: all live labels actually appeared
+    assert set(live) <= set(labels)
+    # invariant 4: counts never exceed arrivals
+    assert int(jnp.max(state.counts)) <= len(labels)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(0, 15), min_size=1, max_size=120),
+       st.lists(st.integers(0, 15), min_size=1, max_size=120))
+def test_property_merge_union_counts(a_labels, b_labels):
+    """Merged shard counters == counter over the union stream when capacity
+    is large enough for exact counting."""
+    cfg = hh.HHConfig(capacity=32, admit_prob=1.0)
+    sa, _ = _run(cfg, np.array(a_labels), seed=0)
+    sb, _ = _run(cfg, np.array(b_labels), seed=1)
+    merged = hh.merge(cfg, sa, sb)
+    got = {int(l): int(c) for l, c in zip(merged.labels, merged.counts)
+           if l >= 0}
+    true = {int(v): int(n) for v, n in
+            zip(*np.unique(np.concatenate([a_labels, b_labels]),
+                           return_counts=True))}
+    assert got == true

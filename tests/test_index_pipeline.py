@@ -1,0 +1,157 @@
+"""Index + end-to-end pipeline invariants (incl. the theory bound)."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (clustering, heavy_hitter, index as I, pipeline,
+                        prefilter, theory)
+from repro.data.streams import make_stream
+
+
+def small_cfg(**kw):
+    d = kw.pop("dim", 32)
+    return pipeline.PipelineConfig(
+        pre=prefilter.PrefilterConfig(num_vectors=3, dim=d, alpha=0.0,
+                                      basis="fixed"),
+        clus=clustering.ClusterConfig(num_clusters=16, dim=d),
+        hh=heavy_hitter.HHConfig(capacity=8, admit_prob=0.5),
+        update_interval=kw.pop("update_interval", 64),
+        **kw)
+
+
+# ------------------------------------------------------------------- index
+def test_upsert_search_roundtrip():
+    cfg = I.IndexConfig(capacity=16, dim=8)
+    idx = I.init(cfg)
+    rng = np.random.default_rng(0)
+    vecs = jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)
+    idx = I.upsert(cfg, idx, jnp.arange(4), vecs,
+                   jnp.array([10, 11, 12, 13]), jnp.ones(4, bool))
+    sc, rows, ids = I.search(cfg, idx, vecs, 1)
+    np.testing.assert_array_equal(np.asarray(rows[:, 0]), np.arange(4))
+    np.testing.assert_array_equal(np.asarray(ids[:, 0]), [10, 11, 12, 13])
+    assert int(idx.version) == 1
+
+
+def test_tombstoned_rows_never_retrieved():
+    cfg = I.IndexConfig(capacity=8, dim=8)
+    idx = I.init(cfg)
+    rng = np.random.default_rng(1)
+    vecs = jnp.asarray(rng.normal(size=(8, 8)), jnp.float32)
+    idx = I.upsert(cfg, idx, jnp.arange(8), vecs, jnp.arange(8),
+                   jnp.ones(8, bool))
+    idx = I.upsert(cfg, idx, jnp.array([3]), vecs[3:4], jnp.array([3]),
+                   jnp.array([False]))  # tombstone row 3
+    sc, rows, _ = I.search(cfg, idx, vecs, 8)
+    live = np.asarray(sc) > -1e29      # -inf scores mark invalid fill rows
+    assert 3 not in np.asarray(rows)[live]
+    _, rows4, _ = I.search(cfg, idx, vecs, 4)
+    assert 3 not in np.asarray(rows4)
+
+
+def test_ivfpq_beats_random_guessing():
+    cfg = I.IVFPQConfig(capacity=512, dim=32, nlist=8, m=4, nprobe=4)
+    rng = np.random.default_rng(2)
+    base = rng.normal(size=(512, 32)).astype(np.float32)
+    idx = I.ivfpq_train(cfg, jax.random.key(0), jnp.asarray(base))
+    idx = I.ivfpq_add(cfg, idx, jnp.asarray(base), jnp.arange(512))
+    q = jnp.asarray(base[:32])
+    _, _, ids = I.ivfpq_search(cfg, idx, q, 10)
+    hits = sum(int(i) in set(np.asarray(ids[i]).tolist())
+               for i in range(32))
+    assert hits >= 20  # self-retrieval recall@10 >= 60%
+
+
+# ----------------------------------------------------------------- pipeline
+def test_pipeline_invariants_end_to_end():
+    cfg = small_cfg()
+    state = pipeline.init(cfg, jax.random.key(0))
+    s = make_stream("synthetic", dim=32)
+    total = 0
+    for _ in range(6):
+        b = s.next_batch(64)
+        total += len(b["doc_id"])
+        state, info = pipeline.ingest_batch(
+            cfg, state, jnp.asarray(b["embedding"]), jnp.asarray(b["doc_id"]))
+    assert int(state.arrivals) == total
+    assert int(state.kept) <= total
+    # counter stays within capacity
+    assert int(jnp.sum(heavy_hitter.active_mask(state.hh))) <= cfg.hh.capacity
+    # index only contains live counter slots
+    live = np.asarray(heavy_hitter.active_mask(state.hh))
+    np.testing.assert_array_equal(np.asarray(state.index.valid), live)
+    # retrieval returns doc ids that were actually streamed
+    q = jnp.asarray(s.queries(8)["embedding"])
+    sc, rows, ids, lbl = pipeline.query(cfg, state, q, 5)
+    ids = np.asarray(ids)
+    assert ((ids >= -1) & (ids < total)).all()
+    assert not np.isnan(np.asarray(sc)).any()
+
+
+def test_scan_ingest_equals_loop_ingest():
+    cfg = small_cfg()
+    s = make_stream("iot", dim=32)  # fixed batch sizes (no poisson)
+    batches = [s.next_batch(32) for _ in range(4)]
+    xs = jnp.asarray(np.stack([b["embedding"] for b in batches]))
+    ids = jnp.asarray(np.stack([b["doc_id"] for b in batches]))
+
+    s1 = pipeline.init(cfg, jax.random.key(0))
+    for i in range(4):
+        s1, _ = pipeline.ingest_batch(cfg, s1, xs[i], ids[i])
+    s2 = pipeline.init(cfg, jax.random.key(0))
+    s2 = pipeline.ingest_stream(cfg, s2, xs, ids)
+    for a, b in zip(jax.tree.leaves(s1), jax.tree.leaves(s2)):
+        if jnp.issubdtype(a.dtype, jax.dtypes.prng_key):
+            a, b = jax.random.key_data(a), jax.random.key_data(b)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_state_memory_accounting_matches_arrays():
+    cfg = small_cfg()
+    state = pipeline.init(cfg, jax.random.key(0))
+    actual = sum(
+        l.size * l.dtype.itemsize for l in jax.tree.leaves(state)
+        if hasattr(l, "size") and hasattr(l.dtype, "itemsize"))
+    claimed = pipeline.state_memory_bytes(cfg)
+    # accounting covers the dominant arrays; scalars/rng excluded
+    assert 0.5 < claimed / actual < 2.0
+
+
+def test_budget_to_config_monotone():
+    ks = [pipeline.budget_to_config(mb).clus.num_clusters
+          for mb in [0.5, 1.0, 2.0]]
+    assert ks == sorted(ks) and ks[0] < ks[-1]
+
+
+# ------------------------------------------------------------------- theory
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 6), st.floats(0.05, 0.4))
+def test_property_retrieval_bound(T, noise):
+    rng = np.random.default_rng(T)
+    m = rng.normal(size=(T, 24))
+    m /= np.linalg.norm(m, axis=1, keepdims=True)
+    t = rng.integers(0, T, 256)
+    eps = rng.normal(size=(256, 24))
+    eps /= np.linalg.norm(eps, axis=1, keepdims=True)
+    corpus = jnp.asarray(m[t] * (1 - noise) + noise * eps, jnp.float32)
+    queries = jnp.asarray(m[rng.integers(0, T, 32)], jnp.float32)
+
+    cfg = clustering.ClusterConfig(num_clusters=T, dim=24)
+    state = clustering.init_from_buffer(cfg, jax.random.key(0), corpus)
+    for _ in range(5):
+        lbl, _ = clustering.assign(cfg, state, corpus)
+        state = clustering.update(cfg, state, corpus, lbl,
+                                  jnp.ones(256, bool))
+    lbl, _ = clustering.assign(cfg, state, corpus)
+    rep = theory.check_bound(queries, corpus, state.centroids, lbl)
+    # the proof-sketch (sqrt) form must hold
+    assert bool(rep.holds_sqrt)
+
+
+def test_state_change_accounting():
+    w, lb, ratio = theory.state_change_rate(jnp.int32(100), jnp.int32(10000))
+    assert float(lb) == 100.0 and float(ratio) == 1.0

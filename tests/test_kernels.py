@@ -1,0 +1,89 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) vs pure-jnp oracle,
+across shapes and dtypes."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.assign.assign import assign_pallas
+from repro.kernels.assign.ref import assign_ref
+from repro.kernels.bag.bag import embedding_bag_pallas
+from repro.kernels.bag.ref import embedding_bag_ref
+from repro.kernels.mips.mips import mips_topk_pallas
+from repro.kernels.mips.ref import mips_topk_ref
+from repro.kernels.prefilter.prefilter import prefilter_scores_pallas
+from repro.kernels.prefilter.ref import prefilter_scores_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _arr(shape, dtype):
+    return jnp.asarray(RNG.normal(size=shape), dtype=dtype)
+
+
+@pytest.mark.parametrize("B,K,d", [(64, 32, 48), (300, 150, 96), (17, 5, 256),
+                                   (1, 700, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_assign_matches_ref(B, K, d, dtype):
+    x, c = _arr((B, d), dtype), _arr((K, d), dtype)
+    i_p, s_p = assign_pallas(x, c)
+    i_r, s_r = assign_ref(x, c)
+    np.testing.assert_array_equal(np.asarray(i_p), np.asarray(i_r))
+    np.testing.assert_allclose(np.asarray(s_p), np.asarray(s_r),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("B,n,d", [(64, 5, 48), (513, 1, 96), (40, 16, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_prefilter_matches_ref(B, n, d, dtype):
+    x, v = _arr((B, d), dtype), _arr((n, d), dtype)
+    r_p = prefilter_scores_pallas(x, v)
+    r_r = prefilter_scores_ref(x, v)
+    np.testing.assert_allclose(np.asarray(r_p), np.asarray(r_r),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("Q,N,d,k", [(4, 300, 32, 10), (1, 2050, 64, 16),
+                                     (9, 128, 48, 128), (2, 64, 16, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mips_matches_ref(Q, N, d, k, dtype):
+    q, x = _arr((Q, d), dtype), _arr((N, d), dtype)
+    valid = jnp.asarray(RNG.random(N) > 0.25)
+    sc_p, id_p = mips_topk_pallas(q, x, valid, k)
+    sc_r, id_r = mips_topk_ref(q, x, valid, k)
+    np.testing.assert_allclose(np.asarray(sc_p), np.asarray(sc_r),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-4)
+    if dtype == jnp.float32:  # ids only bit-stable in fp32 (bf16 can tie)
+        live = np.asarray(sc_r) > -1e29  # -inf fill rows tie arbitrarily
+        np.testing.assert_array_equal(np.asarray(id_p)[live],
+                                      np.asarray(id_r)[live])
+
+
+@pytest.mark.parametrize("V,d,L,Bags", [(50, 16, 64, 10), (200, 32, 31, 7),
+                                        (10, 8, 128, 128)])
+@pytest.mark.parametrize("mode", ["sum", "mean"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bag_matches_ref(V, d, L, Bags, mode, dtype):
+    table = _arr((V, d), dtype)
+    idx = jnp.asarray(RNG.integers(0, V, L).astype(np.int32))
+    seg = jnp.asarray(np.sort(RNG.integers(0, Bags, L)).astype(np.int32))
+    w = jnp.asarray(RNG.random(L).astype(np.float32))
+    out_p = embedding_bag_pallas(table, idx, seg, Bags, w, mode)
+    out_r = embedding_bag_ref(table, idx, seg, Bags, w, mode)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-4)
+
+
+def test_bag_unsorted_segments_and_empty_bags():
+    table = _arr((20, 8), jnp.float32)
+    idx = jnp.asarray(RNG.integers(0, 20, 40).astype(np.int32))
+    seg = jnp.asarray(RNG.integers(0, 5, 40).astype(np.int32))  # unsorted
+    out_p = embedding_bag_pallas(table, idx, seg, 8)  # bags 5..7 empty
+    out_r = embedding_bag_ref(table, idx, seg, 8)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-5)
+    assert np.allclose(np.asarray(out_p[5:]), 0.0)
