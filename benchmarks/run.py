@@ -22,7 +22,8 @@ def _tables():
                             table8_eviction_ablation,
                             table9_adaptive_ablation,
                             table10_11_pca_sensitivity,
-                            table12_component_ablation, table13_downstream)
+                            table12_component_ablation, table13_downstream,
+                            table14_two_stage)
     scale = 0.5 if FAST else 1.0
 
     def n(x):
@@ -39,6 +40,7 @@ def _tables():
         ("table10_11", lambda: table10_11_pca_sensitivity.run(n_batches=n(24))),
         ("table12", lambda: table12_component_ablation.run(n_batches=n(30))),
         ("table13", lambda: table13_downstream.run(n_batches=n(40))),
+        ("table14", lambda: table14_two_stage.run(n_batches=n(40))),
         ("fig3", lambda: fig3_hyperparams.run(n_batches=n(20))),
     ]
 

@@ -20,7 +20,8 @@ warm = np.concatenate([stream.next_batch(256)["embedding"] for _ in range(2)])
 # 2. The paper's pipeline (Table 2 defaults; alpha calibrated to the
 #    synthetic embedding geometry — see EXPERIMENTS.md).
 cfg = paper_pipeline_config(dim=DIM, k=150, capacity=100,
-                            update_interval=256, alpha=0.1)
+                            update_interval=256, alpha=0.1,
+                            store_depth=8)  # doc rings for two-stage (§5)
 state = pipeline.init(cfg, jax.random.key(0), warmup=jnp.asarray(warm))
 print(f"state memory budget: {pipeline.state_memory_bytes(cfg)/1e6:.2f} MB")
 
@@ -37,7 +38,7 @@ print(f"active clusters={int(jnp.sum(heavy_hitter.active_mask(state.hh)))} "
 print(f"index refreshes={int(state.upserts)}  "
       f"counter writes={int(state.hh.total_writes)}")
 
-# 4. Query the live prototype index.
+# 4. Query the live prototype index (one representative doc per cluster).
 qs = stream.queries(5)
 scores, rows, doc_ids, clusters = pipeline.query(
     cfg, state, jnp.asarray(qs["embedding"]), k=5)
@@ -45,3 +46,19 @@ for i in range(5):
     print(f"query topic {qs['topic'][i]:>3}: "
           f"retrieved docs {np.asarray(doc_ids[i]).tolist()} "
           f"(cos {np.asarray(scores[i]).round(3).tolist()})")
+
+# 5. Routed two-stage retrieval: the prototype index routes each query to
+#    its top-nprobe clusters, then their per-cluster document ring buffers
+#    (the `store_depth` most recent admitted docs) are exact-reranked by
+#    the fused gather-rerank kernel — many real docs per relevant cluster
+#    instead of one representative, from the very same pipeline state.
+from repro.store import docstore
+
+print(f"\ndoc store: {int(docstore.size(state.store))} live docs in "
+      f"{cfg.clus.num_clusters} x {cfg.store_depth} ring slots")
+scores2, rows2, doc_ids2, clusters2 = pipeline.query(
+    cfg, state, jnp.asarray(qs["embedding"]), k=5, two_stage=True, nprobe=10)
+for i in range(5):
+    print(f"query topic {qs['topic'][i]:>3}: "
+          f"two-stage docs {np.asarray(doc_ids2[i]).tolist()} "
+          f"(cos {np.asarray(scores2[i]).round(3).tolist()})")

@@ -20,8 +20,11 @@ fact_stream = FactStream(make_stream("btc", dim=DIM), n_entities=32, seed=0)
 warm = fact_stream.next_batch(256)
 
 cfg = paper_pipeline_config(dim=DIM, k=150, capacity=100,
-                            update_interval=128, alpha=0.1)
-server = RAGServer(cfg, ServerConfig(max_batch=16, topk=10),
+                            update_interval=128, alpha=0.1, store_depth=8)
+# two_stage=True answers from the per-cluster document store (routed
+# exact rerank) instead of one representative doc per prototype
+server = RAGServer(cfg, ServerConfig(max_batch=16, topk=10, two_stage=True,
+                                     nprobe=10),
                    jax.random.key(0), warmup=warm["embedding"])
 server.ingest(warm["embedding"], warm["doc_id"])
 
@@ -49,10 +52,11 @@ for q in queries:
     pred_s = fact_stream.read(q, np.asarray(out[2]))
     em_static.append(exact_match(pred_s, q["answer"]))
 
-lat = server.stats["query_latency_ms"]
+lat = server.latency_stats()
 print(f"docs ingested           : {server.stats['docs']}")
 print(f"time-sensitive QA (EM)  : streaming={np.mean(em_live):.2f}  "
       f"static-snapshot={np.mean(em_static):.2f}")
-print(f"query batch latency (ms): p50={np.percentile(lat, 50):.2f}")
+print(f"query batch latency (ms): mean={lat['mean_ms']:.2f} "
+      f"p50={lat['p50_ms']:.2f} p99={lat['p99_ms']:.2f}")
 ex = queries[0]
 print(f"example: '{ex['question']}' -> truth {ex['answer']}")

@@ -28,6 +28,8 @@ def paper_pipeline_config(
                                 # are the benchmark default — see EXPERIMENTS.md
     update_interval: int = 1000,
     adaptive: bool = False,
+    store_depth: int = 0,       # per-cluster doc ring (two-stage retrieval
+                                # opts in; 0 keeps prototype-only memory)
 ) -> pipeline.PipelineConfig:
     return pipeline.PipelineConfig(
         pre=prefilter.PrefilterConfig(
@@ -40,6 +42,7 @@ def paper_pipeline_config(
             morris=morris, adaptive=adaptive,
             max_capacity=2 * capacity if adaptive else None),
         update_interval=update_interval,
+        store_depth=store_depth,
     )
 
 

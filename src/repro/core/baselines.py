@@ -295,3 +295,25 @@ def make_streaming_rag(cfg: pipeline.PipelineConfig):
 
     return Method("streaming_rag", init, ingest, query,
                   lambda: pipeline.state_memory_bytes(cfg))
+
+
+# ------------------------------------------------- streaming RAG, two-stage
+def make_streaming_rag_two_stage(cfg: pipeline.PipelineConfig,
+                                 nprobe: int = 8):
+    """The pipeline with routed two-stage retrieval: prototype router +
+    exact rerank over the per-cluster document store (same ingest path)."""
+
+    def init(key, warmup=None):
+        return pipeline.init(cfg, key, warmup)
+
+    def ingest(s, x, ids):
+        s2, _ = pipeline.ingest_batch(cfg, s, x, ids)
+        return s2
+
+    def query(s, q, k_):
+        sc, rows, ids, _ = pipeline.query(cfg, s, q, k_, two_stage=True,
+                                          nprobe=nprobe)
+        return sc, rows, ids
+
+    return Method("streaming_rag_2stage", init, ingest, query,
+                  lambda: pipeline.state_memory_bytes(cfg))

@@ -11,6 +11,14 @@ microbatch are preserved by scanning the counter update item-by-item.
 Each cluster also tracks a *representative document* (the best-similarity
 member seen so far) so retrieval can surface concrete documents for the
 downstream QA/summarization benches, not just prototype vectors.
+
+On top of the prototype index sits a tiered document store
+(``repro.store``): per cluster, a ring buffer of the ``store_depth`` most
+recently *admitted* documents. ``query(..., two_stage=True)`` then runs
+routed two-stage retrieval — the prototype index routes each query to its
+top-``nprobe`` clusters and the routed ring buffers are exact-reranked
+(``repro.kernels.rerank``), so retrieval covers many real documents per
+relevant cluster instead of one representative.
 """
 from __future__ import annotations
 
@@ -22,6 +30,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import clustering, heavy_hitter, index as index_lib, prefilter
+from repro.kernels.common import NEG_INF, l2_normalize
+from repro.kernels.rerank.ops import rerank_topk
+from repro.store import docstore
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,6 +43,10 @@ class PipelineConfig:
     clus: clustering.ClusterConfig = clustering.ClusterConfig()
     hh: heavy_hitter.HHConfig = heavy_hitter.HHConfig()
     update_interval: int = 1000   # index upsert every N arrivals
+    # Docs kept per cluster for two-stage retrieval. 0 (default) disables
+    # the doc store so prototype-only configs keep the paper's memory
+    # footprint; two-stage configs opt in explicitly.
+    store_depth: int = 0
 
     @property
     def index(self) -> index_lib.IndexConfig:
@@ -39,8 +54,15 @@ class PipelineConfig:
             capacity=self.hh.bmax(), dim=self.clus.dim,
             normalize=True, use_pallas=self.clus.use_pallas)
 
+    @property
+    def store(self) -> docstore.StoreConfig:
+        return docstore.StoreConfig(
+            num_clusters=self.clus.num_clusters, depth=self.store_depth,
+            dim=self.clus.dim, normalize=True)
+
     def __post_init__(self):
         assert self.pre.dim == self.clus.dim, "prefilter/cluster dim mismatch"
+        assert self.store_depth >= 0
 
 
 class PipelineState(NamedTuple):
@@ -48,6 +70,13 @@ class PipelineState(NamedTuple):
     clus: clustering.ClusterState
     hh: heavy_hitter.HHState
     index: index_lib.FlatIndex
+    store: docstore.DocStore  # per-cluster ring buffers of admitted docs
+    # [bmax] i32 — cluster label per index slot, snapshotted at upsert time.
+    # Routing must read THIS, not the live hh labels: the counter rewrites
+    # its slots on eviction immediately, while index vectors only refresh
+    # every update_interval arrivals — a live lookup would score a slot
+    # against one cluster's centroid and rerank a different cluster's ring.
+    route_labels: jnp.ndarray
     rep_ids: jnp.ndarray      # [k] i32 best-similarity doc id per cluster
     rep_sims: jnp.ndarray     # [k] f32
     arrivals: jnp.ndarray     # i32 — total docs seen (stream offset)
@@ -68,6 +97,8 @@ def init(cfg: PipelineConfig, key: jax.Array,
         clus=clus,
         hh=heavy_hitter.init(cfg.hh),
         index=index_lib.init(cfg.index),
+        store=docstore.init(cfg.store),
+        route_labels=jnp.full((cfg.hh.bmax(),), -1, jnp.int32),
         rep_ids=jnp.full((k_clusters,), -1, jnp.int32),
         rep_sims=jnp.full((k_clusters,), -jnp.inf, jnp.float32),
         arrivals=jnp.int32(0),
@@ -125,24 +156,34 @@ def ingest_batch(cfg: PipelineConfig, state: PipelineState,
     rep_ids, rep_sims = _update_representatives(
         (state.rep_ids, state.rep_sims), labels, sims, doc_ids, keep, k)
 
+    # tiered document store: ring-write docs that survived BOTH filters
+    # (pre-filter relevance + a heavy-hitter-tracked cluster at arrival)
+    stored = keep & (hh_info["admitted"] | hh_info["hit"])
+    stamps = state.arrivals + jnp.arange(B, dtype=jnp.int32)
+    store = docstore.add_batch(
+        cfg.store, state.store, x, labels, stored, doc_ids, stamps)
+
     # (5) incremental index upsert every `update_interval` arrivals
     since = state.since_upsert + B
 
     def do_upsert(args):
-        idx, hh_s = args
+        idx, _lbls, hh_s = args
         slots = jnp.arange(cfg.hh.bmax(), dtype=jnp.int32)
         lbl = hh_s.labels
         vecs = clus.centroids[jnp.maximum(lbl, 0)]
         ids = rep_ids[jnp.maximum(lbl, 0)]
         valid = heavy_hitter.active_mask(hh_s)
-        return index_lib.upsert(cfg.index, idx, slots, vecs, ids, valid)
+        new_idx = index_lib.upsert(cfg.index, idx, slots, vecs, ids, valid)
+        return new_idx, jnp.where(valid, lbl, -1)  # slot->label snapshot
 
     refresh = since >= cfg.update_interval
-    new_index = jax.lax.cond(
-        refresh, do_upsert, lambda args: args[0], (state.index, hh))
+    new_index, route_labels = jax.lax.cond(
+        refresh, do_upsert, lambda args: args[:2],
+        (state.index, state.route_labels, hh))
 
     new_state = PipelineState(
-        pre=pre, clus=clus, hh=hh, index=new_index,
+        pre=pre, clus=clus, hh=hh, index=new_index, store=store,
+        route_labels=route_labels,
         rep_ids=rep_ids, rep_sims=rep_sims,
         arrivals=state.arrivals + B,
         since_upsert=jnp.where(refresh, 0, since),
@@ -157,6 +198,7 @@ def ingest_batch(cfg: PipelineConfig, state: PipelineState,
         "sims": sims,
         "admitted": hh_info["admitted"],
         "evicted_label": hh_info["evicted_label"],
+        "stored": stored,
         "refreshed": refresh,
     }
     return new_state, info
@@ -180,11 +222,46 @@ def ingest_stream(cfg: PipelineConfig, state: PipelineState,
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "k"))
-def query(cfg: PipelineConfig, state: PipelineState, q: jnp.ndarray, k: int = 10):
-    """Retrieve top-k prototypes: (scores [Q,k], slots, doc_ids, cluster_labels)."""
-    scores, rows, ids = index_lib.search(cfg.index, state.index, q, k)
-    return scores, rows, ids, state.hh.labels[rows]
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "k", "two_stage", "nprobe"))
+def query(cfg: PipelineConfig, state: PipelineState, q: jnp.ndarray,
+          k: int = 10, *, two_stage: bool = False, nprobe: int = 8):
+    """Retrieve top-k: (scores [Q,k], rows [Q,k], doc_ids [Q,k], clusters [Q,k]).
+
+    two_stage=False — prototype-only: top-k over the prototype index; rows
+    are index slots, doc_ids the per-cluster representative docs.
+
+    two_stage=True — routed exact retrieval: the prototype index routes
+    each query to its top-``nprobe`` clusters (stage 1), whose document
+    ring buffers are gathered and exact-reranked by the fused Pallas
+    kernel (stage 2). rows are flat store positions cluster*depth + slot,
+    doc_ids real stored documents; dead entries are -1.
+    """
+    if not two_stage:
+        scores, rows, ids = index_lib.search(cfg.index, state.index, q, k)
+        return scores, rows, ids, state.route_labels[rows]
+
+    depth = cfg.store_depth
+    assert depth > 0, "two_stage requires store_depth > 0"
+    assert k <= nprobe * depth, "k must be <= nprobe * store_depth"
+    # stage 1: route through the prototype index -> cluster ids
+    sc1, slots, _ = index_lib.search(cfg.index, state.index, q, nprobe)
+    labels = state.route_labels[slots]                    # [Q, nprobe]
+    routes = jnp.where((sc1 > NEG_INF / 2) & (labels >= 0), labels, -1)
+    # stage 2: gather the routed ring buffers, exact cosine rerank
+    qn = l2_normalize(q)
+    scores, pos = rerank_topk(qn, state.store.embs,
+                              docstore.live_mask(state.store), routes, k,
+                              use_pallas=cfg.clus.use_pallas)
+    dead = pos < 0
+    j = jnp.clip(pos // depth, 0, nprobe - 1)
+    slot = jnp.clip(pos % depth, 0, depth - 1)
+    cluster = jnp.take_along_axis(routes, j, axis=1)
+    cluster = jnp.where(dead, -1, cluster)
+    doc_ids = state.store.ids[jnp.clip(cluster, 0), slot]
+    doc_ids = jnp.where(dead, -1, doc_ids)
+    rows = jnp.where(dead, -1, jnp.clip(cluster, 0) * depth + slot)
+    return scores, rows, doc_ids, cluster
 
 
 def state_memory_bytes(cfg: PipelineConfig) -> int:
@@ -198,9 +275,10 @@ def state_memory_bytes(cfg: PipelineConfig) -> int:
     pre_b = (n * d + pre_w * d) * 4
     clus_b = (k * d + k) * 4
     hh_b = bmax * 8 + cms
-    idx_b = index_lib.memory_bytes(cfg.index)
+    idx_b = index_lib.memory_bytes(cfg.index) + bmax * 4  # + route labels
     rep_b = k * 8
-    return pre_b + clus_b + hh_b + idx_b + rep_b
+    store_b = docstore.memory_bytes(cfg.store)
+    return pre_b + clus_b + hh_b + idx_b + rep_b + store_b
 
 
 def budget_to_config(memory_mb: float, dim: int = 384,
@@ -210,7 +288,9 @@ def budget_to_config(memory_mb: float, dim: int = 384,
     base = base or PipelineConfig()
     budget = memory_mb * 1e6
     per_proto = dim * 4 * 2 + 24          # centroid + index row + bookkeeping
-    k = max(16, int(budget * 0.8 / per_proto))
+    # doc rings hang off clusters only — index/counter slots carry no ring
+    per_cluster = per_proto + base.store_depth * (dim * 4 + 8)
+    k = max(16, int(budget * 0.8 / per_cluster))
     b = max(16, min(k, int(budget * 0.2 / per_proto)))
     return dataclasses.replace(
         base,

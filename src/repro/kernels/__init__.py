@@ -9,12 +9,14 @@ Kernels:
   prefilter — fused multi-vector cosine screening (paper stage 1)
   assign    — fused nearest-centroid assignment (paper stage 2)
   mips      — fused MIPS score + per-block top-k retrieval (paper stage 4)
+  rerank    — routed gather + fused cosine rerank top-k (two-stage stage 2)
   bag       — TBE-style EmbeddingBag gather+segment-reduce (recsys substrate)
 """
 from repro.kernels.assign.ops import assign
 from repro.kernels.bag.ops import embedding_bag
 from repro.kernels.mips.ops import mips_topk
 from repro.kernels.prefilter.ops import prefilter, prefilter_scores
+from repro.kernels.rerank.ops import rerank_topk
 
 __all__ = [
     "assign",
@@ -22,4 +24,5 @@ __all__ = [
     "mips_topk",
     "prefilter",
     "prefilter_scores",
+    "rerank_topk",
 ]

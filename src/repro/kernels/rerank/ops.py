@@ -1,0 +1,37 @@
+"""jit'd public wrapper for routed gather-rerank (two-stage stage 2)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import use_pallas_default
+from repro.kernels.rerank.ref import rerank_topk_ref
+
+
+def rerank_topk(
+    q: jnp.ndarray,
+    embs: jnp.ndarray,
+    live: jnp.ndarray,
+    routes: jnp.ndarray,
+    k: int,
+    *,
+    use_pallas: bool | None = None,
+):
+    """Exact top-k rerank of each query's routed cluster ring buffers.
+
+    q [Q, d]; embs [C, depth, d]; live [C, depth] bool;
+    routes [Q, P] i32 cluster ids per query (-1 = no route); k <= P*depth.
+
+    Returns (scores [Q, k] f32 desc, pos [Q, k] i32) where pos encodes
+    ``j * depth + slot`` into the query's route list (-1 = dead entry).
+    Callers recover the document as
+    ``cluster = routes[q, pos // depth]; slot = pos % depth``.
+    """
+    P, depth = routes.shape[1], embs.shape[1]
+    assert 1 <= k <= P * depth, "k must be in [1, nprobe * depth]"
+    if use_pallas is None:
+        use_pallas = use_pallas_default()
+    if use_pallas:
+        from repro.kernels.rerank.rerank import rerank_topk_pallas
+
+        return rerank_topk_pallas(q, embs, live, routes, k)
+    return rerank_topk_ref(q, embs, live, routes, k)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for routed gather-rerank (two-stage retrieval stage 2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import NEG_INF
+
+
+def rerank_topk_ref(
+    q: jnp.ndarray,
+    embs: jnp.ndarray,
+    live: jnp.ndarray,
+    routes: jnp.ndarray,
+    k: int,
+):
+    """Exact top-k over each query's routed ring buffers.
+
+    Args:
+      q: [Q, d] query vectors (pre-normalized for cosine).
+      embs: [C, depth, d] per-cluster document ring buffers.
+      live: [C, depth] bool — slots holding a real document.
+      routes: [Q, P] i32 cluster ids routed per query (-1 = no route).
+      k: results per query (k <= P * depth).
+
+    Returns:
+      scores: [Q, k] f32 descending (NEG_INF for dead entries).
+      pos: [Q, k] i32 candidate positions j * depth + slot, where j indexes
+        the query's route list; -1 for dead entries. Ties on score resolve
+        to the lowest position — the Pallas path matches bit-for-bit.
+    """
+    Q = q.shape[0]
+    C, depth, _ = embs.shape
+    r = jnp.clip(routes, 0, C - 1)
+    cand = embs[r]                                       # [Q, P, depth, d]
+    s = jnp.einsum("qd,qpsd->qps", q.astype(jnp.float32),
+                   cand.astype(jnp.float32))
+    ok = live[r] & (routes >= 0)[..., None]
+    s = jnp.where(ok, s, NEG_INF).reshape(Q, -1)         # [Q, P*depth]
+    scores, pos = jax.lax.top_k(s, k)
+    pos = jnp.where(scores > NEG_INF / 2, pos, -1)
+    return scores, pos.astype(jnp.int32)

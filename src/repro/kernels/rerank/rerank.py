@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: routed gather + fused cosine rerank top-k.
+
+Stage 2 of two-stage retrieval: stage 1 (the prototype index) routes each
+query to its top-``nprobe`` clusters; this kernel exact-reranks those
+clusters' document ring buffers (``repro.store``). The gather is done by
+the DMA engine, not by materializing ``embs[routes]``: the route table is
+a *scalar-prefetch* operand, so the BlockSpec index map reads
+``routes[q, j]`` and streams exactly the routed ``[depth, d]`` ring
+buffer into VMEM per grid step — the ``[Q, nprobe, depth, d]`` gathered
+candidate tensor never exists in HBM.
+
+Grid: (Q, nprobe). Each step scores one query against one routed ring
+buffer on the MXU and reduces to the tile-local top-k in VMEM via k
+iterations of (row-max, min-id mask) — identical tie-breaking to the
+``mips`` kernel, so ids match the jnp oracle bit-for-bit in fp32. A tiny
+phase-2 ``jax.lax.top_k`` merges the nprobe*k tile winners per query.
+
+Dead candidates (empty ring slots, sublane padding) are masked with an
+additive NEG_INF bias row; invalid routes (-1) are clamped to cluster 0
+in the index map and killed inside the kernel by reading the route's
+sign straight from the prefetched table — no store-sized sentinel copy
+is ever materialized per call (the store only gets touched when
+``depth % 8 != 0`` forces a sublane pad).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import (NEG_INF, SUBLANE_F32, interpret_mode,
+                                  pad_dim, round_up)
+
+
+def _rerank_kernel(routes_ref, q_ref, emb_ref, bias_ref, sc_ref, id_ref, *,
+                   depth: int, dp: int, k: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    dead_route = routes_ref[i, j] < 0  # scalar read from the prefetch table
+
+    q = q_ref[...].astype(jnp.float32)       # [1, d]
+    e = emb_ref[0].astype(jnp.float32)       # [dp, d]
+    bias = bias_ref[...].astype(jnp.float32)  # [1, dp]
+
+    s = jax.lax.dot_general(
+        q, e, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) + bias  # [1, dp]
+    s = jnp.where(dead_route, NEG_INF, s)  # whole tile dead if route < 0
+
+    # Candidate positions j*depth + slot; sublane-padded slots (always
+    # NEG_INF-biased) get a sentinel id so they lose every min-id tie.
+    local = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    ids = jnp.where(local < depth, local + j * depth, jnp.int32(2**31 - 2))
+
+    for t in range(k):  # (max, min-id mask) extraction, as in mips
+        m = jnp.max(s, axis=1)  # [1]
+        a = jnp.min(jnp.where(s >= m[:, None], ids, jnp.int32(2**31 - 1)),
+                    axis=1)
+        sc_ref[:, t] = m
+        id_ref[:, t] = a
+        s = jnp.where(ids == a[:, None], NEG_INF, s)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def rerank_topk_pallas(
+    q: jnp.ndarray,
+    embs: jnp.ndarray,
+    live: jnp.ndarray,
+    routes: jnp.ndarray,
+    k: int,
+):
+    """See ``ref.rerank_topk_ref``."""
+    Q, d = q.shape
+    C, depth, _ = embs.shape
+    P = routes.shape[1]
+    dp = round_up(max(depth, 1), SUBLANE_F32)
+
+    # Liveness as an additive bias row; the store itself is only copied
+    # when an odd depth forces a sublane pad (depth % 8, rare).
+    routes_i = routes.astype(jnp.int32)
+    embs_p = embs.astype(jnp.float32)
+    bias = jnp.where(live, 0.0, NEG_INF).astype(jnp.float32)
+    if dp != depth:
+        embs_p = pad_dim(embs_p, 1, SUBLANE_F32)
+        bias = pad_dim(bias, 1, SUBLANE_F32, value=NEG_INF)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Q, P),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j, r: (i, 0)),
+            pl.BlockSpec((1, dp, d),
+                         lambda i, j, r: (jnp.maximum(r[i, j], 0), 0, 0)),
+            pl.BlockSpec((1, dp),
+                         lambda i, j, r: (jnp.maximum(r[i, j], 0), 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i, j, r: (i, j)),
+            pl.BlockSpec((1, k), lambda i, j, r: (i, j)),
+        ],
+    )
+    kernel = functools.partial(_rerank_kernel, depth=depth, dp=dp, k=k)
+    sc, ids = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, P * k), jnp.float32),
+            jax.ShapeDtypeStruct((Q, P * k), jnp.int32),
+        ],
+        interpret=interpret_mode(),
+    )(routes_i, q, embs_p, bias)
+
+    # Phase 2: merge the P*k tile winners per query (tiny).
+    top_sc, posn = jax.lax.top_k(sc, k)
+    pos = jnp.take_along_axis(ids, posn, axis=1)
+    pos = jnp.where((top_sc > NEG_INF / 2) & (pos < P * depth), pos, -1)
+    return top_sc, pos.astype(jnp.int32)

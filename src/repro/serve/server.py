@@ -2,13 +2,23 @@
 
 Couples the ingest pipeline with a micro-batching query front end:
 requests are queued, batched up to (max_batch, max_wait), embedded (if an
-encoder is attached), answered from the live prototype index, and the
-ingest path keeps absorbing stream batches between query rounds — the
-paper's "index refresh without interrupting queries" (functional state
-swaps are atomic by construction).
+encoder is attached), answered from the live index, and the ingest path
+keeps absorbing stream batches between query rounds — the paper's "index
+refresh without interrupting queries" (functional state swaps are atomic
+by construction).
+
+Retrieval mode is selectable: prototype-only (one representative doc per
+cluster) or routed two-stage (prototype router + exact rerank over the
+per-cluster document store) via ``ServerConfig.two_stage``.
+
+Latency accounting is bounded: per-batch query latencies land in a
+fixed-size deque (``latency_window``) and are summarized by
+``latency_stats()`` (running mean + windowed p50/p99), so a long-lived
+server never grows its stats without bound.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Callable
@@ -25,6 +35,9 @@ class ServerConfig:
     max_batch: int = 64
     max_wait_ms: float = 2.0
     topk: int = 10
+    two_stage: bool = False    # routed two-stage retrieval (document store)
+    nprobe: int = 8            # clusters routed per query when two_stage
+    latency_window: int = 1024  # per-batch latencies kept for p50/p99
 
 
 class RAGServer:
@@ -33,11 +46,22 @@ class RAGServer:
                  embed_fn: Callable[[np.ndarray], np.ndarray] | None = None):
         self.cfg = cfg
         self.scfg = server_cfg
+        if server_cfg.two_stage:  # fail at construction, not first flush
+            assert cfg.store_depth > 0, \
+                "two_stage serving needs a PipelineConfig with store_depth > 0"
+            assert server_cfg.topk <= server_cfg.nprobe * cfg.store_depth, \
+                "topk must be <= nprobe * store_depth"
+            assert server_cfg.nprobe <= cfg.hh.bmax(), \
+                "nprobe must be <= the prototype index capacity"
         self.state = pipeline.init(cfg, key, warmup)
         self.embed_fn = embed_fn
         self._pending: list[dict] = []
-        self.stats = {"queries": 0, "docs": 0, "batches": 0,
-                      "query_latency_ms": []}
+        self._lat_sum = 0.0
+        self.stats = {
+            "queries": 0, "docs": 0, "batches": 0,
+            "query_latency_ms":
+                collections.deque(maxlen=server_cfg.latency_window),
+        }
 
     # ---------------------------------------------------------------- ingest
     def ingest(self, embeddings: np.ndarray, doc_ids: np.ndarray):
@@ -75,12 +99,14 @@ class RAGServer:
         t0 = time.perf_counter()
         scores, rows, ids, labels = pipeline.query(
             self.cfg, self.state, jnp.asarray(q, jnp.float32),
-            self.scfg.topk)
+            self.scfg.topk, two_stage=self.scfg.two_stage,
+            nprobe=self.scfg.nprobe)
         jax.block_until_ready(scores)
         lat = (time.perf_counter() - t0) * 1e3
         self.stats["queries"] += len(batch)
         self.stats["batches"] += 1
         self.stats["query_latency_ms"].append(lat)
+        self._lat_sum += lat
         out = []
         for i in range(len(batch)):
             out.append({
@@ -91,6 +117,17 @@ class RAGServer:
                     (time.perf_counter() - batch[i]["t"]) * 1e3,
             })
         return out
+
+    def latency_stats(self) -> dict:
+        """Running mean over all batches; p50/p99 over the bounded window."""
+        window = np.asarray(self.stats["query_latency_ms"], dtype=np.float64)
+        n = self.stats["batches"]
+        return {
+            "batches": n,
+            "mean_ms": self._lat_sum / n if n else 0.0,
+            "p50_ms": float(np.percentile(window, 50)) if window.size else 0.0,
+            "p99_ms": float(np.percentile(window, 99)) if window.size else 0.0,
+        }
 
     def serve_round(self, stream_batch=None) -> list[dict]:
         """One event-loop turn: ingest (if a stream batch arrived), then

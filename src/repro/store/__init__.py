@@ -1,0 +1,20 @@
+"""Tiered document storage behind the prototype router.
+
+``docstore`` — per-cluster ring buffers of recently admitted documents
+(embeddings + ids + arrival stamps) as one flat jit-friendly pytree.
+Stage 2 of routed retrieval reranks these exactly
+(``repro.kernels.rerank``) after the prototype index routes each query to
+its top-``nprobe`` clusters.
+"""
+from repro.store.docstore import (DocStore, StoreConfig, add_batch, init,
+                                  live_mask, memory_bytes, size)
+
+__all__ = [
+    "DocStore",
+    "StoreConfig",
+    "add_batch",
+    "init",
+    "live_mask",
+    "memory_bytes",
+    "size",
+]

@@ -1,0 +1,112 @@
+"""Streaming document store: per-cluster ring buffers of admitted docs.
+
+The prototype index answers *where* (which clusters are relevant); this
+store answers *what* (the actual recent documents behind each cluster).
+Per cluster it keeps the ``depth`` most recently admitted documents —
+embedding, external doc id, and arrival stamp — as one flat
+``[k, depth, d]`` pytree, so the whole store is jit-compatible,
+``lax.scan``-able inside the ingest loop, checkpointable, and accounted
+in ``pipeline.state_memory_bytes`` like every other state component.
+
+Admission is governed upstream: only documents that pass the pre-filter
+AND whose cluster currently survives the heavy-hitter counter are written
+(see ``pipeline.ingest_batch``), so the store stays focused on the
+clusters the router can actually reach.
+
+``add_batch`` is a vectorized ring scatter with *sequential semantics*:
+the final state equals writing the batch one document at a time, which
+keeps ``ingest_stream`` (lax.scan) bit-identical to the per-batch loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.kernels.common import l2_normalize
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreConfig:
+    num_clusters: int = 100
+    depth: int = 8          # ring slots per cluster (0 disables the store)
+    dim: int = 384
+    normalize: bool = True  # store unit vectors -> cosine rerank
+
+
+class DocStore(NamedTuple):
+    embs: jnp.ndarray    # [k, depth, d] f32 (unit vectors if normalize)
+    ids: jnp.ndarray     # [k, depth] i32 external doc id (-1 = empty slot)
+    # [k, depth] i32 arrival index at admission — provenance for freshness
+    # diagnostics and recency-aware rerank/eviction policies; not read on
+    # the retrieval hot path.
+    stamps: jnp.ndarray
+    ptr: jnp.ndarray     # [k] i32 monotone write counter (slot = ptr % depth)
+
+
+def init(cfg: StoreConfig) -> DocStore:
+    k, depth = cfg.num_clusters, cfg.depth
+    return DocStore(
+        embs=jnp.zeros((k, depth, cfg.dim), jnp.float32),
+        ids=jnp.full((k, depth), -1, jnp.int32),
+        stamps=jnp.full((k, depth), -1, jnp.int32),
+        ptr=jnp.zeros((k,), jnp.int32),
+    )
+
+
+def add_batch(
+    cfg: StoreConfig, store: DocStore, x: jnp.ndarray, labels: jnp.ndarray,
+    admit: jnp.ndarray, doc_ids: jnp.ndarray, stamps: jnp.ndarray,
+) -> DocStore:
+    """Ring-write the admitted documents of one microbatch.
+
+    x: [B, d]; labels: [B] i32 cluster per doc; admit: [B] bool;
+    doc_ids/stamps: [B] i32. Docs with admit=False are dropped.
+
+    Order within the batch is preserved: per cluster, each admitted doc
+    takes the next ring slot in arrival order, and when more than
+    ``depth`` docs of one cluster arrive in a single batch only the last
+    ``depth`` survive — exactly what a sequential per-arrival write would
+    leave behind (and it keeps the scatter free of duplicate indices,
+    whose write order jnp leaves unspecified).
+    """
+    if cfg.depth == 0:
+        return store
+    k, depth = cfg.num_clusters, cfg.depth
+    v = l2_normalize(x) if cfg.normalize else x.astype(jnp.float32)
+
+    lbl = jnp.where(admit, labels, k).astype(jnp.int32)   # k = drop bucket
+    onehot = (lbl[:, None] == jnp.arange(k, dtype=jnp.int32)[None, :])
+    occ = jnp.cumsum(onehot.astype(jnp.int32), axis=0)    # [B, k] running count
+    per_cluster = occ[-1]                                 # [k] admits this batch
+    lbl_c = jnp.minimum(lbl, k - 1)
+    rank = jnp.take_along_axis(occ, lbl_c[:, None], axis=1)[:, 0] - 1  # [B]
+
+    # survivors: the last `depth` admits of each cluster in this batch
+    write = admit & (per_cluster[lbl_c] - rank <= depth)
+    slot = (store.ptr[lbl_c] + rank) % depth
+    row = jnp.where(write, lbl, k)                        # out-of-range drops
+
+    return DocStore(
+        embs=store.embs.at[row, slot].set(v, mode="drop"),
+        ids=store.ids.at[row, slot].set(doc_ids.astype(jnp.int32), mode="drop"),
+        stamps=store.stamps.at[row, slot].set(stamps.astype(jnp.int32),
+                                              mode="drop"),
+        ptr=store.ptr + per_cluster,
+    )
+
+
+def live_mask(store: DocStore) -> jnp.ndarray:
+    """[k, depth] bool — slots holding a real document."""
+    return store.ids >= 0
+
+
+def size(store: DocStore) -> jnp.ndarray:
+    return jnp.sum(live_mask(store).astype(jnp.int32))
+
+
+def memory_bytes(cfg: StoreConfig) -> int:
+    """Resident bytes of the store state (memory-budget accounting)."""
+    k, depth = cfg.num_clusters, cfg.depth
+    return k * depth * (cfg.dim * 4 + 4 + 4) + k * 4

@@ -1,6 +1,6 @@
 """Stream simulators + downstream metrics."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.data.qa import exact_match, rouge_l, token_f1
 from repro.data.streams import STREAMS, make_stream, mixed_stream

@@ -26,9 +26,7 @@ def _run_in_multi_device_subprocess(body: str):
 def test_counter_merge_across_shards_matches_union():
     out = _run_in_multi_device_subprocess("""
         from repro.core import heavy_hitter as hh
-        shard_map = getattr(jax, "shard_map", None)
-        if shard_map is None:
-            from jax.experimental.shard_map import shard_map
+        from repro.distributed.collectives import compat_shard_map as shard_map
         mesh = jax.make_mesh((8,), ("data",))
         cfg = hh.HHConfig(capacity=32, admit_prob=1.0)
         rng = np.random.default_rng(0)
@@ -65,9 +63,7 @@ def test_weighted_centroid_merge_and_compressed_psum():
         from repro.core import clustering as C
         from repro.distributed.collectives import merge_clusters
         from repro.distributed.compression import compressed_psum
-        shard_map = getattr(jax, "shard_map", None)
-        if shard_map is None:
-            from jax.experimental.shard_map import shard_map
+        from repro.distributed.collectives import compat_shard_map as shard_map
         mesh = jax.make_mesh((8,), ("data",))
         rng = np.random.default_rng(1)
         cents = rng.normal(size=(8, 4, 16)).astype(np.float32)
@@ -115,9 +111,7 @@ def test_distributed_mips_matches_exact():
     out = _run_in_multi_device_subprocess("""
         from repro.distributed.collectives import distributed_mips_topk
         from repro.kernels.mips.ref import mips_topk_ref
-        shard_map = getattr(jax, "shard_map", None)
-        if shard_map is None:
-            from jax.experimental.shard_map import shard_map
+        from repro.distributed.collectives import compat_shard_map as shard_map
         mesh = jax.make_mesh((8,), ("model",))
         rng = np.random.default_rng(2)
         N, d, k = 512, 16, 10

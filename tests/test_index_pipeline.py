@@ -4,7 +4,7 @@ import dataclasses
 import numpy as np
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import (clustering, heavy_hitter, index as I, pipeline,
                         prefilter, theory)
@@ -63,6 +63,44 @@ def test_ivfpq_beats_random_guessing():
     hits = sum(int(i) in set(np.asarray(ids[i]).tolist())
                for i in range(32))
     assert hits >= 20  # self-retrieval recall@10 >= 60%
+
+
+def test_ivfpq_search_respects_nprobe_and_tombstones():
+    """Rows outside the probed coarse cells — and rows never validly added
+    (tombstoned/empty slots) — must never surface in results."""
+    cfg = I.IVFPQConfig(capacity=256, dim=32, nlist=8, m=4, nprobe=2)
+    rng = np.random.default_rng(3)
+    base = rng.normal(size=(256, 32)).astype(np.float32)
+    idx = I.ivfpq_train(cfg, jax.random.key(0), jnp.asarray(base))
+    # fill only half the capacity: rows 128..255 stay invalid (tombstones)
+    idx = I.ivfpq_add(cfg, idx, jnp.asarray(base[:128]), jnp.arange(128))
+    assert int(jnp.sum(idx.valid)) == 128
+
+    q = jnp.asarray(rng.normal(size=(16, 32)).astype(np.float32))
+    scores, rows, ids = I.ivfpq_search(cfg, idx, q, 10)
+    scores, rows, ids = map(np.asarray, (scores, rows, ids))
+    live = scores > -1e29
+
+    # tombstoned rows never surface with a live score
+    assert (rows[live] < 128).all()
+    assert (ids[live] >= 0).all()
+
+    # every live result's coarse cell is among that query's top-nprobe
+    from repro.kernels.common import l2_normalize
+    qn = np.asarray(l2_normalize(q))
+    coarse_sim = qn @ np.asarray(idx.coarse).T
+    probe = np.argsort(-coarse_sim, axis=1)[:, :cfg.nprobe]
+    cell = np.asarray(idx.cell)
+    for i in range(q.shape[0]):
+        for r in rows[i][live[i]]:
+            assert cell[r] in probe[i]
+
+    # with nprobe=1 every live result sits in the single probed cell
+    cfg1 = dataclasses.replace(cfg, nprobe=1)
+    s1, r1, _ = I.ivfpq_search(cfg1, idx, q, 10)
+    s1, r1 = np.asarray(s1), np.asarray(r1)
+    for i in range(q.shape[0]):
+        assert (cell[r1[i][s1[i] > -1e29]] == probe[i, 0]).all()
 
 
 # ----------------------------------------------------------------- pipeline

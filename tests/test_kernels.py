@@ -13,6 +13,8 @@ from repro.kernels.mips.mips import mips_topk_pallas
 from repro.kernels.mips.ref import mips_topk_ref
 from repro.kernels.prefilter.prefilter import prefilter_scores_pallas
 from repro.kernels.prefilter.ref import prefilter_scores_ref
+from repro.kernels.rerank.ref import rerank_topk_ref
+from repro.kernels.rerank.rerank import rerank_topk_pallas
 
 RNG = np.random.default_rng(0)
 
@@ -87,3 +89,64 @@ def test_bag_unsorted_segments_and_empty_bags():
     np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r),
                                rtol=1e-5, atol=1e-5)
     assert np.allclose(np.asarray(out_p[5:]), 0.0)
+
+
+@pytest.mark.parametrize("Q,C,depth,P,k,live_frac",
+                         [(4, 10, 8, 3, 5, 0.7),    # generic masked rows
+                          (2, 6, 5, 4, 12, 0.5),    # odd depth (sublane pad)
+                          (7, 20, 16, 6, 10, 0.9),
+                          (1, 3, 4, 2, 8, 0.25),    # k > live members
+                          (3, 5, 8, 2, 1, 0.0)])    # nothing live at all
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rerank_matches_ref(Q, C, depth, P, k, live_frac, dtype):
+    """Routed gather-rerank: scores allclose, top-k ids bit-for-bit (fp32).
+
+    Dead entries (masked ring slots, invalid routes, k beyond the live
+    count) must come back as pos == -1 on BOTH paths, so id equality is
+    exact even in degenerate all-dead configurations.
+    """
+    d = 32
+    q, embs = _arr((Q, d), dtype), _arr((C, depth, d), dtype)
+    live = jnp.asarray(RNG.random((C, depth)) < live_frac)
+    routes = jnp.asarray(RNG.integers(-1, C, (Q, P)).astype(np.int32))
+    sc_p, id_p = rerank_topk_pallas(q, embs, live, routes, k)
+    sc_r, id_r = rerank_topk_ref(q, embs, live, routes, k)
+    np.testing.assert_allclose(np.asarray(sc_p), np.asarray(sc_r),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-4)
+    if dtype == jnp.float32:  # ids only bit-stable in fp32 (bf16 can tie)
+        np.testing.assert_array_equal(np.asarray(id_p), np.asarray(id_r))
+
+
+def test_rerank_duplicate_scores_tie_break():
+    """Identical candidates (exactly tied scores) resolve to the lowest
+    candidate position on both paths — bit-for-bit."""
+    C, depth, d = 4, 4, 8
+    embs = jnp.zeros((C, depth, d), jnp.float32).at[:, :, 0].set(1.0)
+    q = jnp.ones((2, d), jnp.float32)
+    live = jnp.ones((C, depth), bool)
+    routes = jnp.asarray([[0, 1], [2, 2]], jnp.int32)  # dup cluster too
+    sc_p, id_p = rerank_topk_pallas(q, embs, live, routes, 5)
+    sc_r, id_r = rerank_topk_ref(q, embs, live, routes, 5)
+    np.testing.assert_array_equal(np.asarray(id_p), np.asarray(id_r))
+    np.testing.assert_array_equal(np.asarray(id_p),
+                                  [[0, 1, 2, 3, 4], [0, 1, 2, 3, 4]])
+    np.testing.assert_allclose(np.asarray(sc_p), np.asarray(sc_r))
+
+
+def test_rerank_k_exceeds_live_members():
+    """With fewer live docs than k, the tail is (-1, NEG_INF) on both paths
+    and every live doc still surfaces exactly once."""
+    C, depth, d = 3, 4, 16
+    embs = _arr((C, depth, d), jnp.float32)
+    live = jnp.zeros((C, depth), bool).at[0, 1].set(True).at[2, 3].set(True)
+    q = _arr((2, d), jnp.float32)
+    routes = jnp.asarray([[0, 2], [2, 0]], jnp.int32)
+    k = 6
+    sc_p, id_p = rerank_topk_pallas(q, embs, live, routes, k)
+    sc_r, id_r = rerank_topk_ref(q, embs, live, routes, k)
+    np.testing.assert_array_equal(np.asarray(id_p), np.asarray(id_r))
+    np.testing.assert_allclose(np.asarray(sc_p), np.asarray(sc_r),
+                               rtol=1e-5, atol=1e-5)
+    assert ((np.asarray(id_p) >= 0).sum(axis=1) == 2).all()  # 2 live routed
+    assert (np.asarray(sc_p)[np.asarray(id_p) < 0] < -1e29).all()

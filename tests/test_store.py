@@ -1,0 +1,189 @@
+"""Document-store ring semantics + routed two-stage retrieval invariants."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import clustering, heavy_hitter, pipeline, prefilter
+from repro.data.streams import make_stream
+from repro.store import docstore
+
+
+def small_cfg(**kw):
+    d = kw.pop("dim", 32)
+    return pipeline.PipelineConfig(
+        pre=prefilter.PrefilterConfig(num_vectors=3, dim=d, alpha=0.0,
+                                      basis="fixed"),
+        clus=clustering.ClusterConfig(num_clusters=16, dim=d),
+        hh=heavy_hitter.HHConfig(capacity=8, admit_prob=0.5),
+        update_interval=kw.pop("update_interval", 64),
+        store_depth=kw.pop("store_depth", 4),
+        **kw)
+
+
+# ------------------------------------------------------------------ docstore
+def test_ring_write_matches_sequential_semantics():
+    cfg = docstore.StoreConfig(num_clusters=4, depth=3, dim=8,
+                               normalize=False)
+    rng = np.random.default_rng(0)
+    B = 12
+    x = jnp.asarray(rng.normal(size=(B, 8)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 4, B), jnp.int32)
+    admit = jnp.asarray(rng.random(B) > 0.3)
+    ids = jnp.arange(B, dtype=jnp.int32)
+    stamps = ids + 100
+
+    got = docstore.add_batch(cfg, docstore.init(cfg), x, labels, admit, ids,
+                             stamps)
+
+    embs = np.zeros((4, 3, 8), np.float32)
+    sids = -np.ones((4, 3), np.int32)
+    stmp = -np.ones((4, 3), np.int32)
+    ptr = np.zeros(4, np.int32)
+    for i in range(B):  # per-arrival oracle
+        if not bool(admit[i]):
+            continue
+        l, s = int(labels[i]), int(ptr[int(labels[i])]) % 3
+        embs[l, s] = np.asarray(x[i])
+        sids[l, s] = i
+        stmp[l, s] = i + 100
+        ptr[l] += 1
+    np.testing.assert_allclose(np.asarray(got.embs), embs)
+    np.testing.assert_array_equal(np.asarray(got.ids), sids)
+    np.testing.assert_array_equal(np.asarray(got.stamps), stmp)
+    np.testing.assert_array_equal(np.asarray(got.ptr), ptr)
+    np.testing.assert_array_equal(np.asarray(docstore.live_mask(got)),
+                                  sids >= 0)
+
+
+def test_ring_split_batches_equal_one_batch():
+    cfg = docstore.StoreConfig(num_clusters=3, depth=2, dim=4)
+    rng = np.random.default_rng(1)
+    B = 20  # heavy overflow: >depth writes per cluster per batch
+    x = jnp.asarray(rng.normal(size=(B, 4)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 3, B), jnp.int32)
+    admit = jnp.ones(B, bool)
+    ids = jnp.arange(B, dtype=jnp.int32)
+
+    whole = docstore.add_batch(cfg, docstore.init(cfg), x, labels, admit,
+                               ids, ids)
+    split = docstore.init(cfg)
+    for lo, hi in [(0, 7), (7, 8), (8, 20)]:
+        split = docstore.add_batch(cfg, split, x[lo:hi], labels[lo:hi],
+                                   admit[lo:hi], ids[lo:hi], ids[lo:hi])
+    for a, b in zip(whole, split):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_store_memory_accounting_matches_arrays():
+    cfg = docstore.StoreConfig(num_clusters=7, depth=5, dim=24)
+    actual = sum(l.size * l.dtype.itemsize
+                 for l in jax.tree.leaves(docstore.init(cfg)))
+    assert docstore.memory_bytes(cfg) == actual
+
+
+# ---------------------------------------------------------------- two-stage
+def _ingest(cfg, state, stream, n_batches=6, batch=64):
+    for _ in range(n_batches):
+        b = stream.next_batch(batch)
+        state, _ = pipeline.ingest_batch(
+            cfg, state, jnp.asarray(b["embedding"]), jnp.asarray(b["doc_id"]))
+    return state
+
+
+def test_two_stage_query_surfaces_stored_docs():
+    cfg = small_cfg(update_interval=32)
+    state = pipeline.init(cfg, jax.random.key(0))
+    stream = make_stream("synthetic", dim=32)
+    state = _ingest(cfg, state, stream)
+
+    q = jnp.asarray(stream.queries(8)["embedding"])
+    sc, rows, ids, clusters = pipeline.query(cfg, state, q, 6,
+                                             two_stage=True, nprobe=4)
+    sc, rows, ids, clusters = map(np.asarray, (sc, rows, ids, clusters))
+    live = sc > -1e29
+    assert live.any()
+    # live results are real stored docs in the routed clusters
+    store_ids = np.asarray(state.store.ids)
+    depth = cfg.store_depth
+    for i in range(q.shape[0]):
+        for r, d, c in zip(rows[i][live[i]], ids[i][live[i]],
+                           clusters[i][live[i]]):
+            assert c >= 0 and r // depth == c
+            assert store_ids[c, r % depth] == d
+    # dead entries are uniformly -1
+    assert (rows[~live] == -1).all() and (ids[~live] == -1).all()
+    assert (clusters[~live] == -1).all()
+    # scores descend
+    assert (np.diff(sc, axis=1) <= 1e-6).all()
+
+
+def test_two_stage_self_retrieval():
+    """Querying with a stored document's own embedding returns that doc
+    (cosine 1.0) as long as its cluster is routed."""
+    cfg = small_cfg(update_interval=32)
+    state = pipeline.init(cfg, jax.random.key(0))
+    stream = make_stream("synthetic", dim=32)
+    state = _ingest(cfg, state, stream)
+
+    # pick stored docs from clusters the router can actually reach
+    routable = set(np.asarray(state.hh.labels)[np.asarray(state.index.valid)])
+    store_ids = np.asarray(state.store.ids)
+    picks = [(c, s) for c in range(cfg.clus.num_clusters)
+             for s in range(cfg.store_depth)
+             if store_ids[c, s] >= 0 and c in routable][:8]
+    assert picks
+    q = jnp.asarray(np.stack([np.asarray(state.store.embs[c, s])
+                              for c, s in picks]))
+    sc, _rows, ids, _cl = pipeline.query(cfg, state, q, 4, two_stage=True,
+                                         nprobe=cfg.hh.capacity)
+    for i, (c, s) in enumerate(picks):
+        assert int(store_ids[c, s]) in np.asarray(ids[i]).tolist()
+        assert float(sc[i, 0]) > 0.999
+
+
+def test_two_stage_and_proto_share_ingest_state():
+    """two_stage is a pure query-time switch: same state serves both."""
+    cfg = small_cfg()
+    state = pipeline.init(cfg, jax.random.key(0))
+    stream = make_stream("iot", dim=32)
+    state = _ingest(cfg, state, stream, n_batches=4)
+    q = jnp.asarray(stream.queries(4)["embedding"])
+    sc1, *_ = pipeline.query(cfg, state, q, 5)
+    sc2, *_ = pipeline.query(cfg, state, q, 5, two_stage=True, nprobe=4)
+    assert np.isfinite(np.asarray(sc1)).all()
+    assert sc2.shape == (4, 5)
+
+
+def test_store_disabled_depth_zero():
+    cfg = small_cfg(store_depth=0)
+    state = pipeline.init(cfg, jax.random.key(0))
+    stream = make_stream("iot", dim=32)
+    state = _ingest(cfg, state, stream, n_batches=2)
+    assert state.store.embs.shape == (16, 0, 32)
+    assert int(state.arrivals) > 0
+    # memory accounting stays consistent with the actual (empty) arrays
+    assert pipeline.state_memory_bytes(cfg) < pipeline.state_memory_bytes(
+        dataclasses.replace(cfg, store_depth=4))
+
+
+def test_routing_uses_upsert_snapshot_not_live_counter_labels():
+    """Stage-1 scores come from the index snapshot, so routing must use the
+    slot->label mapping captured at upsert time: counter evictions between
+    refreshes rewrite hh.labels immediately and would misroute stage 2."""
+    cfg = small_cfg(update_interval=32)
+    state = pipeline.init(cfg, jax.random.key(0))
+    stream = make_stream("synthetic", dim=32)
+    state = _ingest(cfg, state, stream)
+
+    q = jnp.asarray(stream.queries(6)["embedding"])
+    before = pipeline.query(cfg, state, q, 6, two_stage=True, nprobe=4)
+    # simulate post-upsert evictions: scramble every live counter label
+    scrambled = state._replace(hh=state.hh._replace(
+        labels=jnp.where(state.hh.labels >= 0,
+                         (state.hh.labels + 7) % cfg.clus.num_clusters,
+                         state.hh.labels)))
+    after = pipeline.query(cfg, scrambled, q, 6, two_stage=True, nprobe=4)
+    for a, b in zip(before, after):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
