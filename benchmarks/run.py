@@ -23,7 +23,7 @@ def _tables():
                             table9_adaptive_ablation,
                             table10_11_pca_sensitivity,
                             table12_component_ablation, table13_downstream,
-                            table14_two_stage)
+                            table14_two_stage, table15_sharded)
     scale = 0.5 if FAST else 1.0
 
     def n(x):
@@ -41,6 +41,7 @@ def _tables():
         ("table12", lambda: table12_component_ablation.run(n_batches=n(30))),
         ("table13", lambda: table13_downstream.run(n_batches=n(40))),
         ("table14", lambda: table14_two_stage.run(n_batches=n(40))),
+        ("table15", lambda: table15_sharded.run(n_batches=n(24))),
         ("fig3", lambda: fig3_hyperparams.run(n_batches=n(20))),
     ]
 

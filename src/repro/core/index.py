@@ -20,7 +20,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import l2_normalize
+from repro.kernels.common import NEG_INF, l2_normalize
 from repro.kernels.mips.ops import mips_topk
 
 
@@ -205,11 +205,15 @@ def ivfpq_search(cfg: IVFPQConfig, index: IVFPQIndex, queries: jnp.ndarray, k: i
         )[..., 0],
         axis=2,
     )                                                        # [Q, cap]
-    full = code_scores + jnp.take_along_axis(
-        coarse_sim, index.cell[None].clip(0), axis=1)        # + q·c_cell
+    # rows never validly added carry cell = -1: mask them out of the
+    # coarse-sim gather (a clip would score them against cell 0's centroid)
+    cell_live = index.cell >= 0
+    cell_sim = jnp.take_along_axis(
+        coarse_sim, jnp.where(cell_live, index.cell, 0)[None], axis=1)
+    full = code_scores + jnp.where(cell_live[None, :], cell_sim, NEG_INF)
 
     in_probe = jnp.any(index.cell[None, :, None] == probe[:, None, :], axis=-1)
-    ok = in_probe & index.valid[None, :]
-    masked = jnp.where(ok, full, -1e30)
+    ok = in_probe & index.valid[None, :] & cell_live[None, :]
+    masked = jnp.where(ok, full, NEG_INF)
     scores, rows = jax.lax.top_k(masked, k)
     return scores, rows, index.ids[rows]

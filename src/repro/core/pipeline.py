@@ -12,6 +12,12 @@ Each cluster also tracks a *representative document* (the best-similarity
 member seen so far) so retrieval can surface concrete documents for the
 downstream QA/summarization benches, not just prototype vectors.
 
+The per-stage implementation lives in ``repro.engine`` (stages.py composed
+by engine.py); this module keeps the public config/state types and the
+jit-compiled single-device entry points, which stay bit-identical to the
+pre-engine fused step. ``repro.engine.sharded`` composes the same stages
+under ``shard_map`` for multi-device ingest/serving.
+
 On top of the prototype index sits a tiered document store
 (``repro.store``): per cluster, a ring buffer of the ``store_depth`` most
 recently *admitted* documents. ``query(..., two_stage=True)`` then runs
@@ -30,8 +36,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import clustering, heavy_hitter, index as index_lib, prefilter
-from repro.kernels.common import NEG_INF, l2_normalize
-from repro.kernels.rerank.ops import rerank_topk
 from repro.store import docstore
 
 
@@ -109,99 +113,20 @@ def init(cfg: PipelineConfig, key: jax.Array,
     )
 
 
-def _update_representatives(state_rep, labels, sims, doc_ids, keep, k):
-    """Track the *freshest* member doc per cluster (recency scatter-max).
-
-    Doc ids are monotone in arrival time, so the max id is the newest
-    member — retrieval then surfaces current facts, which is the entire
-    point of a streaming index (the paper's time-sensitive QA case study).
-    rep_sims tracks that member's similarity for diagnostics.
-    """
-    rep_ids, rep_sims = state_rep
-    seg = jnp.where(keep, labels, k)
-    newest = jax.ops.segment_max(
-        jnp.where(keep, doc_ids, -1), seg, num_segments=k + 1)[:k]
-    new_ids = jnp.maximum(rep_ids, newest.astype(jnp.int32))
-    wins = keep & (doc_ids >= new_ids[jnp.minimum(labels, k - 1)])
-    new_sims = rep_sims
-    new_sims = new_sims.at[jnp.where(wins, labels, k)].set(
-        jnp.where(wins, sims, 0.0), mode="drop")
-    return new_ids, new_sims
-
-
 @functools.partial(jax.jit, static_argnames=("cfg",), donate_argnames=("state",))
 def ingest_batch(cfg: PipelineConfig, state: PipelineState,
                  x: jnp.ndarray, doc_ids: jnp.ndarray):
     """Process one microbatch of embeddings [B, d] with external ids [B] i32.
 
-    Returns (new_state, info dict of per-batch diagnostics).
+    Returns (new_state, info dict of per-batch diagnostics). The
+    implementation lives in ``repro.engine`` as a composition of the seven
+    engine stages (screen, assign+update, count, store-write,
+    upsert-snapshot, route, rerank) shared with the ``shard_map``
+    multi-device path; this wrapper only adds jit + buffer donation.
     """
-    B = x.shape[0]
-    k = cfg.clus.num_clusters
-    rng, k_hh = jax.random.split(state.rng)
+    from repro.engine.engine import ingest_impl
 
-    # (1) adaptive-basis window ingest + (2) relevance screening
-    pre = prefilter.ingest(cfg.pre, state.pre, x)
-    r, keep = prefilter.score(cfg.pre, pre, x)
-
-    # (3) cluster assignment + centroid update (only retained items)
-    labels, sims = clustering.assign(cfg.clus, state.clus, x)
-    clus = clustering.update(cfg.clus, state.clus, x, labels, keep)
-
-    # (4) heavy-hitter counting over retained labels (per-arrival scan)
-    masked_labels = jnp.where(keep, labels, -1).astype(jnp.int32)
-    hh, hh_info = heavy_hitter.update_batch(cfg.hh, state.hh, masked_labels, k_hh)
-
-    # representative docs per cluster
-    rep_ids, rep_sims = _update_representatives(
-        (state.rep_ids, state.rep_sims), labels, sims, doc_ids, keep, k)
-
-    # tiered document store: ring-write docs that survived BOTH filters
-    # (pre-filter relevance + a heavy-hitter-tracked cluster at arrival)
-    stored = keep & (hh_info["admitted"] | hh_info["hit"])
-    stamps = state.arrivals + jnp.arange(B, dtype=jnp.int32)
-    store = docstore.add_batch(
-        cfg.store, state.store, x, labels, stored, doc_ids, stamps)
-
-    # (5) incremental index upsert every `update_interval` arrivals
-    since = state.since_upsert + B
-
-    def do_upsert(args):
-        idx, _lbls, hh_s = args
-        slots = jnp.arange(cfg.hh.bmax(), dtype=jnp.int32)
-        lbl = hh_s.labels
-        vecs = clus.centroids[jnp.maximum(lbl, 0)]
-        ids = rep_ids[jnp.maximum(lbl, 0)]
-        valid = heavy_hitter.active_mask(hh_s)
-        new_idx = index_lib.upsert(cfg.index, idx, slots, vecs, ids, valid)
-        return new_idx, jnp.where(valid, lbl, -1)  # slot->label snapshot
-
-    refresh = since >= cfg.update_interval
-    new_index, route_labels = jax.lax.cond(
-        refresh, do_upsert, lambda args: args[:2],
-        (state.index, state.route_labels, hh))
-
-    new_state = PipelineState(
-        pre=pre, clus=clus, hh=hh, index=new_index, store=store,
-        route_labels=route_labels,
-        rep_ids=rep_ids, rep_sims=rep_sims,
-        arrivals=state.arrivals + B,
-        since_upsert=jnp.where(refresh, 0, since),
-        kept=state.kept + jnp.sum(keep.astype(jnp.int32)),
-        upserts=state.upserts + refresh.astype(jnp.int32),
-        rng=rng,
-    )
-    info = {
-        "relevance": r,
-        "keep": keep,
-        "labels": masked_labels,
-        "sims": sims,
-        "admitted": hh_info["admitted"],
-        "evicted_label": hh_info["evicted_label"],
-        "stored": stored,
-        "refreshed": refresh,
-    }
-    return new_state, info
+    return ingest_impl(cfg, state, x, doc_ids)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",), donate_argnames=("state",))
@@ -237,31 +162,9 @@ def query(cfg: PipelineConfig, state: PipelineState, q: jnp.ndarray,
     kernel (stage 2). rows are flat store positions cluster*depth + slot,
     doc_ids real stored documents; dead entries are -1.
     """
-    if not two_stage:
-        scores, rows, ids = index_lib.search(cfg.index, state.index, q, k)
-        return scores, rows, ids, state.route_labels[rows]
+    from repro.engine.engine import query_impl
 
-    depth = cfg.store_depth
-    assert depth > 0, "two_stage requires store_depth > 0"
-    assert k <= nprobe * depth, "k must be <= nprobe * store_depth"
-    # stage 1: route through the prototype index -> cluster ids
-    sc1, slots, _ = index_lib.search(cfg.index, state.index, q, nprobe)
-    labels = state.route_labels[slots]                    # [Q, nprobe]
-    routes = jnp.where((sc1 > NEG_INF / 2) & (labels >= 0), labels, -1)
-    # stage 2: gather the routed ring buffers, exact cosine rerank
-    qn = l2_normalize(q)
-    scores, pos = rerank_topk(qn, state.store.embs,
-                              docstore.live_mask(state.store), routes, k,
-                              use_pallas=cfg.clus.use_pallas)
-    dead = pos < 0
-    j = jnp.clip(pos // depth, 0, nprobe - 1)
-    slot = jnp.clip(pos % depth, 0, depth - 1)
-    cluster = jnp.take_along_axis(routes, j, axis=1)
-    cluster = jnp.where(dead, -1, cluster)
-    doc_ids = state.store.ids[jnp.clip(cluster, 0), slot]
-    doc_ids = jnp.where(dead, -1, doc_ids)
-    rows = jnp.where(dead, -1, jnp.clip(cluster, 0) * depth + slot)
-    return scores, rows, doc_ids, cluster
+    return query_impl(cfg, state, q, k, two_stage=two_stage, nprobe=nprobe)
 
 
 def state_memory_bytes(cfg: PipelineConfig) -> int:

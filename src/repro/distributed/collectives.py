@@ -64,26 +64,30 @@ def make_distributed_merge(cfg, mesh, data_axis_names: tuple[str, ...]):
     """shard_map-wrapped reconciliation of per-shard pipeline states.
 
     Takes the data-sharded PipelineState pytree (counters/centroids differ
-    per shard) and returns one where cluster and counter state are globally
-    consistent (replicated across data shards).
+    per shard) and returns one where cluster, counter, representative-doc
+    AND document-store state are globally consistent (replicated across
+    data shards). The index rebuild + routing snapshot goes through the
+    shared ``engine.stages.upsert_snapshot`` — the same code the
+    single-device ingest step runs.
     """
-    from repro.core import index as index_lib, pipeline
+    from repro.core import pipeline
+    from repro.engine import stages
+    from repro.store import docstore
 
     axis = data_axis_names
 
     def local_merge(state: pipeline.PipelineState) -> pipeline.PipelineState:
         clus = merge_clusters(state.clus, axis)
         hh = merge_counters(cfg.hh, state.hh, axis)
-        # rebuild index rows from merged prototypes
-        slots = jnp.arange(cfg.hh.bmax(), dtype=jnp.int32)
-        vecs = clus.centroids[jnp.maximum(hh.labels, 0)]
         rep = jax.lax.pmax(state.rep_ids, axis)
-        ids = rep[jnp.maximum(hh.labels, 0)]
-        valid = heavy_hitter.active_mask(hh)
-        idx = index_lib.upsert(cfg.index, state.index, slots, vecs, ids, valid)
         rep_sims = jax.lax.pmax(state.rep_sims, axis)
+        # exact ring-buffer union (newest `depth` per cluster survive)
+        gathered_store = jax.lax.all_gather(state.store, axis)
+        store = docstore.merge_stacked(cfg.store, gathered_store)
+        idx, route_labels = stages.upsert_snapshot(
+            cfg.index, state.index, hh, clus.centroids, rep)
         return state._replace(clus=clus, hh=hh, index=idx,
-                              route_labels=jnp.where(valid, hh.labels, -1),
+                              route_labels=route_labels, store=store,
                               rep_ids=rep, rep_sims=rep_sims)
 
     def shard_fn(stacked_slice):
@@ -123,6 +127,65 @@ def distributed_mips_topk(q, index_rows, valid, k: int, axis: str = "model"):
     all_id = jax.lax.all_gather(glob_id, axis, axis=1, tiled=True)
     sc, pos = jax.lax.top_k(all_sc, k)
     return sc, jnp.take_along_axis(all_id, pos, axis=1)
+
+
+def distributed_rerank_topk(qn, embs, live, ids, routes, k: int,
+                            axis: str = "model", use_pallas: bool | None = None):
+    """Distributed two-stage rerank: doc-store rings cluster-sharded over
+    ``axis`` (inside shard_map). Generalizes ``distributed_mips_topk`` to
+    routed ring gathers.
+
+    qn replicated [Q, d] (pre-normalized); embs [kl, depth, d] / live
+    [kl, depth] / ids [kl, depth] are this shard's cluster slice (global
+    clusters [off, off+kl), off = axis_index * kl); routes [Q, P]
+    replicated global cluster ids (-1 = no route).
+
+    Each shard masks the route list to its own clusters, reranks its rings
+    locally (same kernel as single-device stage 2), then the per-shard
+    top-k merge globally. Because the masked route list keeps the GLOBAL
+    route positions, the merged (score, pos) order — including the
+    lowest-position tie-break — is bit-identical to a single device
+    reranking the full store.
+
+    Returns (scores [Q,k] desc, pos [Q,k] = j*depth+slot into the route
+    list, doc_ids [Q,k]); dead entries are -1.
+    """
+    from repro.kernels.rerank.ops import rerank_topk
+
+    kl, depth = embs.shape[0], embs.shape[1]
+    P = routes.shape[1]
+    off = jax.lax.axis_index(axis) * kl
+    local_routes = jnp.where((routes >= off) & (routes < off + kl),
+                             routes - off, -1)
+    scores, pos = rerank_topk(qn, embs, live, local_routes, k,
+                              use_pallas=use_pallas)
+
+    # resolve each live local candidate's doc id while its ring is local
+    dead = pos < 0
+    j = jnp.clip(pos // depth, 0, P - 1)
+    slot = jnp.clip(pos % depth, 0, depth - 1)
+    lcl = jnp.take_along_axis(local_routes, j, axis=1)
+    doc = jnp.where(dead, -1, ids[jnp.clip(lcl, 0), slot])
+    pos_key = jnp.where(dead, P * depth, pos)  # dead entries sort last
+
+    all_sc = jax.lax.all_gather(scores, axis, axis=1, tiled=True)   # [Q,S*k]
+    all_pos = jax.lax.all_gather(pos_key, axis, axis=1, tiled=True)
+    all_doc = jax.lax.all_gather(doc, axis, axis=1, tiled=True)
+
+    # top-k with lowest-position tie-break == single-device lax.top_k over
+    # the flat [Q, P*depth] score table: stable sort by position, then
+    # stable sort by descending score.
+    o2 = jnp.argsort(all_pos, axis=1)
+    sc2 = jnp.take_along_axis(all_sc, o2, axis=1)
+    pos2 = jnp.take_along_axis(all_pos, o2, axis=1)
+    doc2 = jnp.take_along_axis(all_doc, o2, axis=1)
+    o1 = jnp.argsort(-sc2, axis=1)[:, :k]
+    sc = jnp.take_along_axis(sc2, o1, axis=1)
+    posk = jnp.take_along_axis(pos2, o1, axis=1)
+    dock = jnp.take_along_axis(doc2, o1, axis=1)
+    alive = sc > NEG_INF / 2
+    return (sc, jnp.where(alive, posk, -1).astype(jnp.int32),
+            jnp.where(alive, dock, -1).astype(jnp.int32))
 
 
 def hierarchical_psum(x, pod_axis: str | None, data_axis: str):

@@ -167,3 +167,22 @@ def shardings_from_pspecs(pspecs, mesh):
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s),
         pspecs, is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Streaming-engine state sharding (engine/sharded.py)
+# ---------------------------------------------------------------------------
+def leading_axis_pspecs(tree, axis: str | None):
+    """P(axis) on the leading dim of every leaf; P() when axis is None.
+
+    This is the engine's two sharding layouts in one rule: stacked
+    shard-local PipelineStates ([n_data, ...] over the data axis) and the
+    cluster-sharded serving doc store ([num_clusters, ...] over the model
+    axis)."""
+    spec = P(axis) if axis else P()
+    return jax.tree.map(lambda _: spec, tree)
+
+
+def engine_state_shardings(mesh, tree, axis: str | None):
+    """NamedShardings for a stacked engine state tree on ``mesh``."""
+    return shardings_from_pspecs(leading_axis_pspecs(tree, axis), mesh)

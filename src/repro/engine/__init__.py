@@ -1,0 +1,17 @@
+"""Streaming engine: stage-decomposed ingest/query over one state pytree.
+
+``stages``  — the seven composable stages (screen, assign+update, count,
+              store-write, upsert-snapshot, route, rerank) extracted from
+              the fused pipeline step. Pure functions of (cfg, state, batch)
+              with no device-placement assumptions, so the single-device
+              path and the ``shard_map`` multi-device path share ONE
+              implementation.
+``engine``  — the single-device composition (``ingest``/``query`` impls
+              behind ``core.pipeline``'s public jit wrappers) and the
+              ``Engine`` convenience object the server is built on.
+``sharded`` — ``ShardedEngine``: data-sharded ingest with periodic exact
+              reconciliation, the doc store cluster-sharded over the model
+              axis, and distributed two-stage retrieval (replicated
+              routing, per-shard rerank, global top-k merge).
+"""
+from repro.engine.engine import Engine  # noqa: F401

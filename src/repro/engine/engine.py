@@ -1,0 +1,133 @@
+"""Single-device composition of the engine stages.
+
+``ingest_impl``/``query_impl`` are the un-jitted stage compositions —
+``core.pipeline`` exposes them behind its original jit-compiled public API
+(``ingest_batch``/``query``), and ``engine.sharded`` calls the very same
+functions inside ``shard_map``, so single- and multi-device execution
+share one implementation and single-device behavior is bit-identical to
+the pre-engine pipeline.
+
+``Engine`` wraps (cfg, state) behind the small serving protocol
+(``ingest``/``query``/``index_size``) that ``serve.server.RAGServer`` is
+built on; ``sharded.ShardedEngine`` implements the same protocol over a
+device mesh.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pipeline
+from repro.engine import stages
+from repro.kernels.common import l2_normalize
+from repro.store import docstore
+
+
+def ingest_impl(cfg: "pipeline.PipelineConfig", state: "pipeline.PipelineState",
+                x: jnp.ndarray, doc_ids: jnp.ndarray):
+    """Process one microbatch of embeddings [B, d] with external ids [B] i32.
+
+    Returns (new_state, info dict of per-batch diagnostics).
+    """
+    B = x.shape[0]
+    k = cfg.clus.num_clusters
+    rng, k_hh = jax.random.split(state.rng)
+
+    pre, r, keep = stages.screen(cfg.pre, state.pre, x)
+    clus, labels, sims = stages.assign_update(cfg.clus, state.clus, x, keep)
+    hh, masked_labels, hh_info = stages.count(cfg.hh, state.hh, labels, keep,
+                                              k_hh)
+    rep_ids, rep_sims = stages.update_representatives(
+        state.rep_ids, state.rep_sims, labels, sims, doc_ids, keep, k)
+
+    stored = keep & (hh_info["admitted"] | hh_info["hit"])
+    stamps = state.arrivals + jnp.arange(B, dtype=jnp.int32)
+    store = stages.store_write(cfg.store, state.store, x, labels, stored,
+                               doc_ids, stamps)
+
+    since = state.since_upsert + B
+    refresh = since >= cfg.update_interval
+    new_index, route_labels = jax.lax.cond(
+        refresh,
+        lambda args: stages.upsert_snapshot(cfg.index, args[0], hh,
+                                            clus.centroids, rep_ids),
+        lambda args: args,
+        (state.index, state.route_labels))
+
+    new_state = pipeline.PipelineState(
+        pre=pre, clus=clus, hh=hh, index=new_index, store=store,
+        route_labels=route_labels,
+        rep_ids=rep_ids, rep_sims=rep_sims,
+        arrivals=state.arrivals + B,
+        since_upsert=jnp.where(refresh, 0, since),
+        kept=state.kept + jnp.sum(keep.astype(jnp.int32)),
+        upserts=state.upserts + refresh.astype(jnp.int32),
+        rng=rng,
+    )
+    info = {
+        "relevance": r,
+        "keep": keep,
+        "labels": masked_labels,
+        "sims": sims,
+        "admitted": hh_info["admitted"],
+        "evicted_label": hh_info["evicted_label"],
+        "stored": stored,
+        "refreshed": refresh,
+    }
+    return new_state, info
+
+
+def query_impl(cfg: "pipeline.PipelineConfig", state: "pipeline.PipelineState",
+               q: jnp.ndarray, k: int, *, two_stage: bool, nprobe: int):
+    """Retrieve top-k: (scores [Q,k], rows [Q,k], doc_ids [Q,k], clusters)."""
+    from repro.core import index as index_lib
+
+    if not two_stage:
+        scores, rows, ids = index_lib.search(cfg.index, state.index, q, k)
+        return scores, rows, ids, state.route_labels[rows]
+
+    depth = cfg.store_depth
+    assert depth > 0, "two_stage requires store_depth > 0"
+    assert k <= nprobe * depth, "k must be <= nprobe * store_depth"
+    routes = stages.route(cfg.index, state.index, state.route_labels, q,
+                          nprobe)
+    qn = l2_normalize(q)
+    scores, pos = stages.rerank(state.store, qn, routes, k,
+                                cfg.clus.use_pallas)
+    return stages.decode_rerank(state.store.ids, routes, scores, pos, depth,
+                                nprobe)
+
+
+class Engine:
+    """Single-device streaming engine: (cfg, PipelineState) behind the
+    serving protocol. ``ShardedEngine`` implements the same protocol over
+    a mesh — the server never branches on which one it holds."""
+
+    def __init__(self, cfg: "pipeline.PipelineConfig", key: jax.Array,
+                 warmup: jnp.ndarray | None = None,
+                 state: "pipeline.PipelineState | None" = None):
+        self.cfg = cfg
+        self.state = (pipeline.init(cfg, key, warmup)
+                      if state is None else state)
+
+    def ingest(self, x: jnp.ndarray, doc_ids: jnp.ndarray) -> dict:
+        self.state, info = pipeline.ingest_batch(
+            self.cfg, self.state, jnp.asarray(x),
+            jnp.asarray(doc_ids, jnp.int32))
+        return info
+
+    def query(self, q: jnp.ndarray, k: int = 10, *, two_stage: bool = False,
+              nprobe: int = 8):
+        return pipeline.query(self.cfg, self.state, jnp.asarray(q),
+                              k, two_stage=two_stage, nprobe=nprobe)
+
+    def index_size(self) -> int:
+        from repro.core import index as index_lib
+
+        return int(index_lib.size(self.state.index))
+
+    def state_memory_bytes(self) -> int:
+        return pipeline.state_memory_bytes(self.cfg)
+
+    def store_bytes_per_device(self) -> int:
+        return docstore.memory_bytes(self.cfg.store)

@@ -1,0 +1,325 @@
+"""ShardedEngine: the multi-device composition of the engine stages.
+
+Execution model (DESIGN.md §5, extended):
+
+  * ingest  — the stream is data-sharded over the mesh's ``data`` axis:
+              every data shard runs the full single-device ingest step
+              (``engine.engine.ingest_impl`` — the SAME code, inside
+              shard_map) on its sub-stream. Shard-local states never get
+              overwritten by reconciliation, so repeated merges stay exact
+              (no double counting of a shared prefix).
+  * reconcile — periodically (every ``reconcile_every`` ingested batches)
+              the shards publish a globally-consistent serving snapshot:
+              counters label-union-merged, centroids count-weighted-merged,
+              rep-ids recency-merged, and the doc-store rings exactly
+              merged (newest ``depth`` per cluster across shards). The
+              prototype index + routing table are rebuilt through the
+              shared ``stages.upsert_snapshot``. The merge is gather-based
+              and bit-deterministic, so every device publishes the same
+              snapshot — this is the "exact reconciliation" the counters'
+              merge semantics make possible (counts merge exactly,
+              centroids merge count-weighted).
+  * serve   — the snapshot's doc store is cluster-sharded over the mesh's
+              ``model`` axis (shard m owns clusters [m·k/M, (m+1)·k/M)),
+              dropping per-device store bytes by M. Two-stage queries run
+              stage-1 routing replicated against the (small) prototype
+              index, stage-2 rerank locally per shard, then a global top-k
+              merge (``collectives.distributed_rerank_topk``) whose
+              tie-breaking is bit-identical to the single-device path.
+
+The host-side ``reconcile_states`` is the single source of truth for
+merge semantics: the distributed path all-gathers shard states and runs
+the very same function, so the mesh execution equals the host oracle
+leaf-for-leaf.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from typing import NamedTuple
+
+from repro.core import clustering, heavy_hitter, index as index_lib, pipeline
+from repro.distributed import sharding as shard_rules
+from repro.distributed.collectives import (compat_shard_map,
+                                           distributed_rerank_topk)
+from repro.engine import stages
+from repro.engine.engine import ingest_impl
+from repro.kernels.common import l2_normalize
+from repro.store import docstore
+
+
+class ServingSnapshot(NamedTuple):
+    """The queryable state published by reconciliation."""
+
+    index: index_lib.FlatIndex   # replicated
+    route_labels: jnp.ndarray    # [bmax] i32, replicated
+    store: docstore.DocStore     # cluster-sharded over the model axis
+
+
+# ---------------------------------------------------------------- pure merges
+def _merge_clusters_stacked(stacked: clustering.ClusterState
+                            ) -> clustering.ClusterState:
+    """Count-weighted centroid merge over the leading shard axis. Clusters
+    unseen by every shard keep shard 0's centroid (shards start from one
+    shared init, so those are identical across shards by construction)."""
+    n = jnp.sum(stacked.counts, axis=0)
+    wsum = jnp.sum(stacked.centroids * stacked.counts[..., None], axis=0)
+    c = jnp.where((n > 0)[:, None], wsum / jnp.maximum(n, 1.0)[:, None],
+                  stacked.centroids[0])
+    return clustering.ClusterState(centroids=c, counts=n)
+
+
+def _merge_counters_stacked(hh_cfg: heavy_hitter.HHConfig, stacked
+                            ) -> heavy_hitter.HHState:
+    """Fold pairwise exact label-union merges from shard 0 upward — the
+    same fold order as ``collectives.merge_counters``."""
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    merged = jax.tree.map(lambda x: x[0], stacked)
+    for i in range(1, n):
+        merged = heavy_hitter.merge(
+            hh_cfg, merged, jax.tree.map(lambda x: x[i], stacked))
+    return merged
+
+
+def reconcile_states(cfg: pipeline.PipelineConfig, clus, hh, rep_ids,
+                     store) -> ServingSnapshot:
+    """Merge S shard-local pipeline sub-states (cluster, counter, rep-id
+    and store leaves stacked on a leading shard axis) into one
+    globally-consistent serving snapshot with the FULL (unsharded) doc
+    store. Pure and deterministic — the shard_map reconcile path
+    all-gathers and calls exactly this, so distributed reconciliation
+    equals this host-side oracle leaf-for-leaf."""
+    m_clus = _merge_clusters_stacked(clus)
+    m_hh = _merge_counters_stacked(cfg.hh, hh)
+    m_rep = jnp.max(rep_ids, axis=0)
+    m_store = docstore.merge_stacked(cfg.store, store)
+    index, route_labels = stages.upsert_snapshot(
+        cfg.index, index_lib.init(cfg.index), m_hh, m_clus.centroids, m_rep)
+    return ServingSnapshot(index=index, route_labels=route_labels,
+                           store=m_store)
+
+
+def reconcile_stacked_states(cfg: pipeline.PipelineConfig,
+                             stacked: pipeline.PipelineState
+                             ) -> ServingSnapshot:
+    """Host-side oracle entry: reconcile full stacked PipelineStates."""
+    return reconcile_states(cfg, stacked.clus, stacked.hh, stacked.rep_ids,
+                            stacked.store)
+
+
+# ------------------------------------------------------------------- engine
+class ShardedEngine:
+    """Data-sharded streaming ingest + cluster-sharded serving over a mesh.
+
+    Implements the same serving protocol as ``engine.Engine`` —
+    ``ingest`` / ``query`` / ``index_size`` — so ``RAGServer`` can hold
+    either. ``mesh`` may carry a ``data`` axis (ingest sharding), a
+    ``model`` axis (doc-store cluster sharding), or both; a missing axis
+    degrades to that dimension running unsharded.
+    """
+
+    def __init__(self, cfg: pipeline.PipelineConfig, mesh, key: jax.Array,
+                 *, warmup: jnp.ndarray | None = None,
+                 data_axis: str = "data", model_axis: str = "model",
+                 reconcile_every: int = 1):
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        self.cfg = cfg
+        self.mesh = mesh
+        self.data_axis = data_axis if data_axis in sizes else None
+        self.model_axis = model_axis if model_axis in sizes else None
+        self.n_data = sizes.get(data_axis, 1)
+        self.n_model = sizes.get(model_axis, 1)
+        assert cfg.clus.num_clusters % self.n_model == 0, \
+            "num_clusters must divide the model axis for cluster sharding"
+        self.reconcile_every = max(1, reconcile_every)
+        self._batches_since_reconcile = 0
+        self.serving: ServingSnapshot | None = None
+
+        # All shards start from ONE shared init (identical centroids /
+        # prefilter basis / counters) and diverge only through their
+        # sub-streams + admission rng — required for exact reconciliation
+        # of never-updated clusters.
+        base = pipeline.init(cfg, key, warmup)
+        rngs = jax.random.split(jax.random.fold_in(key, 0x5A), self.n_data)
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (self.n_data,) + a.shape),
+            base._replace(rng=jnp.zeros(())))  # rng stacked separately below
+        stacked = stacked._replace(rng=rngs)
+        self._data_spec = P(self.data_axis) if self.data_axis else P()
+        self.local = jax.device_put(
+            stacked,
+            shard_rules.engine_state_shardings(mesh, stacked, self.data_axis))
+        self._ingest_fn = self._build_ingest()
+        self._reconcile_fn = self._build_reconcile()
+        self._rerank_fns: dict = {}
+
+    @staticmethod
+    def shard_init_state(cfg, key, shard: int, n_data: int,
+                         warmup=None) -> pipeline.PipelineState:
+        """The exact state data shard ``shard`` starts from — exposed so
+        single-device oracles can replay a shard's sub-stream."""
+        base = pipeline.init(cfg, key, warmup)
+        rngs = jax.random.split(jax.random.fold_in(key, 0x5A), n_data)
+        return base._replace(rng=rngs[shard])
+
+    # ------------------------------------------------------------ shard_map
+    def _build_ingest(self):
+        cfg, axis, data_axis = self.cfg, self._data_spec, self.data_axis
+
+        def shard_fn(stacked, x, ids):
+            state = jax.tree.map(lambda a: a[0], stacked)
+            new_state, _ = ingest_impl(cfg, state, x[0], ids[0])
+            return jax.tree.map(lambda a: a[None], new_state)
+
+        def run(stacked, x, ids):
+            fn = compat_shard_map(
+                shard_fn, mesh=self.mesh,
+                in_specs=(shard_rules.leading_axis_pspecs(stacked, data_axis),
+                          axis, axis),
+                out_specs=shard_rules.leading_axis_pspecs(stacked, data_axis),
+                check_vma=False)
+            return fn(stacked, x, ids)
+
+        # donate the stacked state like the single-device jit wrapper does —
+        # without it every microbatch copies the full [n_data, ...] pytree
+        return jax.jit(run, donate_argnums=(0,))
+
+    def _build_reconcile(self):
+        cfg = self.cfg
+        data_axis, model_axis = self.data_axis, self.model_axis
+        n_model = self.n_model
+
+        def shard_fn(stacked):
+            state = jax.tree.map(lambda a: a[0], stacked)
+            sub = (state.clus, state.hh, state.rep_ids, state.store)
+            if data_axis is not None:
+                sub = jax.lax.all_gather(sub, data_axis)
+            else:
+                sub = jax.tree.map(lambda a: a[None], sub)
+            snap = reconcile_states(cfg, *sub)
+            shard = (jax.lax.axis_index(model_axis)
+                     if model_axis else jnp.int32(0))
+            store = docstore.shard_slice(cfg.store, snap.store, shard,
+                                         n_model)
+            return snap._replace(store=store)
+
+        def run(stacked):
+            out_specs = ServingSnapshot(
+                index=shard_rules.leading_axis_pspecs(
+                    self._abstract_index(), None),
+                route_labels=P(),
+                store=shard_rules.leading_axis_pspecs(
+                    docstore.init(cfg.store), model_axis))
+            fn = compat_shard_map(
+                shard_fn, mesh=self.mesh,
+                in_specs=(shard_rules.leading_axis_pspecs(
+                    stacked, data_axis),),
+                out_specs=out_specs, check_vma=False)
+            return fn(stacked)
+
+        return jax.jit(run)
+
+    def _abstract_index(self):
+        return index_lib.init(self.cfg.index)
+
+    def _build_rerank(self, k: int, nprobe: int):
+        cfg = self.cfg
+        model_axis = self.model_axis
+        use_pallas = cfg.clus.use_pallas
+
+        def shard_fn(qn, routes, store):
+            return distributed_rerank_topk(
+                qn, store.embs, docstore.live_mask(store), store.ids,
+                routes, k, model_axis, use_pallas=use_pallas)
+
+        def run(qn, routes, store):
+            fn = compat_shard_map(
+                shard_fn, mesh=self.mesh,
+                in_specs=(P(), P(),
+                          shard_rules.leading_axis_pspecs(store, model_axis)),
+                out_specs=(P(), P(), P()), check_vma=False)
+            return fn(qn, routes, store)
+
+        return jax.jit(run)
+
+    # -------------------------------------------------------------- protocol
+    def ingest(self, x, doc_ids):
+        """Ingest one global microbatch [B, d]: split contiguously into
+        ``n_data`` shard sub-batches and advance every shard's local
+        pipeline in parallel. Returns None (per-shard infos stay local)."""
+        x = jnp.asarray(x)
+        ids = jnp.asarray(doc_ids, jnp.int32)
+        B = x.shape[0]
+        assert B % self.n_data == 0, "batch must divide the data axis"
+        xs = x.reshape(self.n_data, B // self.n_data, *x.shape[1:])
+        idss = ids.reshape(self.n_data, B // self.n_data)
+        self.ingest_sharded(xs, idss)
+
+    def ingest_sharded(self, xs, idss):
+        """Ingest pre-split sub-streams: xs [n_data, b, d], idss [n_data, b]."""
+        sh = NamedSharding(self.mesh, self._data_spec)
+        self.local = self._ingest_fn(
+            self.local, jax.device_put(jnp.asarray(xs), sh),
+            jax.device_put(jnp.asarray(idss, jnp.int32), sh))
+        self._batches_since_reconcile += 1
+        if self._batches_since_reconcile >= self.reconcile_every:
+            self.reconcile()
+
+    def reconcile(self) -> ServingSnapshot:
+        """Publish a fresh globally-consistent serving snapshot."""
+        self.serving = self._reconcile_fn(self.local)
+        self._batches_since_reconcile = 0
+        return self.serving
+
+    def query(self, q, k: int = 10, *, two_stage: bool = False,
+              nprobe: int = 8):
+        """Same contract as ``pipeline.query`` over the serving snapshot."""
+        if self.serving is None:
+            self.reconcile()
+        snap = self.serving
+        q = jnp.asarray(q, jnp.float32)
+        cfg = self.cfg
+        if not two_stage:
+            scores, rows, ids = index_lib.search(cfg.index, snap.index, q, k)
+            return scores, rows, ids, snap.route_labels[rows]
+
+        depth = cfg.store_depth
+        assert depth > 0, "two_stage requires store_depth > 0"
+        assert k <= nprobe * depth, "k must be <= nprobe * store_depth"
+        routes = stages.route(cfg.index, snap.index, snap.route_labels, q,
+                              nprobe)
+        qn = l2_normalize(q)
+        if self.model_axis is None:
+            scores, pos = stages.rerank(snap.store, qn, routes, k,
+                                        cfg.clus.use_pallas)
+            return stages.decode_rerank(snap.store.ids, routes, scores, pos,
+                                        depth, nprobe)
+        key = (k, nprobe)
+        if key not in self._rerank_fns:
+            self._rerank_fns[key] = self._build_rerank(k, nprobe)
+        scores, pos, doc_ids = self._rerank_fns[key](qn, routes, snap.store)
+        return stages.decode_rerank(None, routes, scores, pos, depth, nprobe,
+                                    doc_ids=doc_ids)
+
+    # ------------------------------------------------------------ accounting
+    def index_size(self) -> int:
+        if self.serving is None:
+            self.reconcile()
+        return int(index_lib.size(self.serving.index))
+
+    def state_memory_bytes(self) -> int:
+        return pipeline.state_memory_bytes(self.cfg)
+
+    def store_bytes_per_device(self) -> int:
+        """Resident serving-store bytes on ONE device (cluster sharding
+        divides the ring buffers across the model axis)."""
+        if self.serving is None:
+            self.reconcile()
+        total = 0
+        for leaf in jax.tree.leaves(self.serving.store):
+            shard_shape = leaf.sharding.shard_shape(leaf.shape)
+            total += int(np.prod(shard_shape)) * leaf.dtype.itemsize
+        return total

@@ -1,0 +1,146 @@
+"""The composable stages of the streaming engine.
+
+Each stage is a pure function over plain pytrees — no mesh, no jit, no
+device placement — extracted from the fused per-microbatch pipeline step
+(paper Algorithm 1) plus the two retrieval stages of routed two-stage
+retrieval. ``engine.engine`` composes them into the single-device step;
+``engine.sharded`` and ``distributed/collectives.py`` compose the same
+functions inside ``shard_map``, so there is exactly one implementation of
+each piece of pipeline semantics (the upsert/route-label snapshot logic in
+particular used to be forked between ``pipeline.do_upsert`` and
+``collectives.local_merge``).
+
+Stage map (ingest):
+
+    screen ──► assign_update ──► count ──► update_representatives
+                                   │
+                                   ├──► store_write   (admitted docs)
+                                   └──► upsert_snapshot (every T arrivals)
+
+Stage map (two-stage query):
+
+    route (prototype index, replicated) ──► rerank (ring buffers, shardable)
+                                              └──► decode_rerank
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import clustering, heavy_hitter, index as index_lib, prefilter
+from repro.kernels.common import NEG_INF
+from repro.kernels.rerank.ops import rerank_topk
+from repro.store import docstore
+
+
+# --------------------------------------------------------------------- ingest
+def screen(pre_cfg: prefilter.PrefilterConfig, pre_state, x: jnp.ndarray):
+    """(1) adaptive-basis window ingest + (2) relevance screening."""
+    pre = prefilter.ingest(pre_cfg, pre_state, x)
+    r, keep = prefilter.score(pre_cfg, pre, x)
+    return pre, r, keep
+
+
+def assign_update(clus_cfg: clustering.ClusterConfig, clus_state,
+                  x: jnp.ndarray, keep: jnp.ndarray):
+    """(3) cluster assignment + centroid update (only retained items)."""
+    labels, sims = clustering.assign(clus_cfg, clus_state, x)
+    clus = clustering.update(clus_cfg, clus_state, x, labels, keep)
+    return clus, labels, sims
+
+
+def count(hh_cfg: heavy_hitter.HHConfig, hh_state, labels: jnp.ndarray,
+          keep: jnp.ndarray, key: jax.Array):
+    """(4) heavy-hitter counting over retained labels (per-arrival scan)."""
+    masked_labels = jnp.where(keep, labels, -1).astype(jnp.int32)
+    hh, hh_info = heavy_hitter.update_batch(hh_cfg, hh_state, masked_labels, key)
+    return hh, masked_labels, hh_info
+
+
+def update_representatives(rep_ids, rep_sims, labels, sims, doc_ids, keep,
+                           k: int):
+    """Track the *freshest* member doc per cluster (recency scatter-max).
+
+    Doc ids are monotone in arrival time, so the max id is the newest
+    member — retrieval then surfaces current facts, which is the entire
+    point of a streaming index (the paper's time-sensitive QA case study).
+    rep_sims tracks that member's similarity for diagnostics.
+    """
+    seg = jnp.where(keep, labels, k)
+    newest = jax.ops.segment_max(
+        jnp.where(keep, doc_ids, -1), seg, num_segments=k + 1)[:k]
+    new_ids = jnp.maximum(rep_ids, newest.astype(jnp.int32))
+    wins = keep & (doc_ids >= new_ids[jnp.minimum(labels, k - 1)])
+    new_sims = rep_sims
+    new_sims = new_sims.at[jnp.where(wins, labels, k)].set(
+        jnp.where(wins, sims, 0.0), mode="drop")
+    return new_ids, new_sims
+
+
+def store_write(store_cfg: docstore.StoreConfig, store, x, labels, stored,
+                doc_ids, stamps):
+    """Tiered document store: ring-write docs that survived BOTH filters
+    (pre-filter relevance + a heavy-hitter-tracked cluster at arrival)."""
+    return docstore.add_batch(store_cfg, store, x, labels, stored, doc_ids,
+                              stamps)
+
+
+def upsert_snapshot(index_cfg: index_lib.IndexConfig, index, hh_state,
+                    centroids, rep_ids):
+    """(5) rebuild the prototype index from the live counter slots and
+    snapshot the slot->label routing table at the same instant.
+
+    Routing must read THIS snapshot, not the live hh labels: the counter
+    rewrites its slots on eviction immediately, while index vectors only
+    refresh on upsert — a live lookup would score a slot against one
+    cluster's centroid and rerank a different cluster's ring.
+
+    Returns (new_index, route_labels [bmax] i32 with -1 for dead slots).
+    """
+    bmax = hh_state.labels.shape[0]
+    slots = jnp.arange(bmax, dtype=jnp.int32)
+    lbl = hh_state.labels
+    vecs = centroids[jnp.maximum(lbl, 0)]
+    ids = rep_ids[jnp.maximum(lbl, 0)]
+    valid = heavy_hitter.active_mask(hh_state)
+    new_index = index_lib.upsert(index_cfg, index, slots, vecs, ids, valid)
+    return new_index, jnp.where(valid, lbl, -1)
+
+
+# ---------------------------------------------------------------------- query
+def route(index_cfg: index_lib.IndexConfig, index, route_labels,
+          q: jnp.ndarray, nprobe: int) -> jnp.ndarray:
+    """Stage 1: the prototype index routes each query to its top-``nprobe``
+    clusters. Returns routes [Q, nprobe] i32 cluster ids (-1 = no route)."""
+    sc1, slots, _ = index_lib.search(index_cfg, index, q, nprobe)
+    labels = route_labels[slots]
+    return jnp.where((sc1 > NEG_INF / 2) & (labels >= 0), labels, -1)
+
+
+def rerank(store, qn: jnp.ndarray, routes: jnp.ndarray, k: int,
+           use_pallas: bool | None):
+    """Stage 2: gather the routed ring buffers, exact cosine rerank.
+
+    Returns (scores [Q,k] desc, pos [Q,k] = j*depth+slot into the route
+    list, -1 for dead entries)."""
+    return rerank_topk(qn, store.embs, docstore.live_mask(store), routes, k,
+                       use_pallas=use_pallas)
+
+
+def decode_rerank(store_ids, routes, scores, pos, depth: int, nprobe: int,
+                  doc_ids=None):
+    """Resolve rerank positions into (scores, rows, doc_ids, clusters).
+
+    rows are flat store positions cluster*depth + slot; dead entries -1.
+    ``doc_ids`` may be passed pre-resolved (the distributed rerank looks
+    them up shard-locally before the gather, when the rings are still
+    addressable); otherwise they are read from ``store_ids``."""
+    dead = pos < 0
+    j = jnp.clip(pos // depth, 0, nprobe - 1)
+    slot = jnp.clip(pos % depth, 0, depth - 1)
+    cluster = jnp.take_along_axis(routes, j, axis=1)
+    cluster = jnp.where(dead, -1, cluster)
+    if doc_ids is None:
+        doc_ids = jnp.where(dead, -1, store_ids[jnp.clip(cluster, 0), slot])
+    rows = jnp.where(dead, -1, jnp.clip(cluster, 0) * depth + slot)
+    return scores, rows, doc_ids, cluster

@@ -30,3 +30,35 @@ def axis_sizes(mesh) -> dict[str, int]:
 def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh over however many real devices exist (tests)."""
     return jax.make_mesh(shape, axes)
+
+
+def force_host_devices(n: int):
+    """Force ``n`` CPU host-platform devices for debug meshes. Appends the
+    XLA flag, which only takes effect if jax backends are not yet
+    initialized — so callers must parse CLI flags and call this before
+    their first device query. Raises if it is already too late."""
+    import os
+
+    if n <= 1:
+        return
+    import re
+
+    flag = "--xla_force_host_platform_device_count"
+    flags = os.environ.get("XLA_FLAGS", "")
+    m = re.search(rf"{flag}=(\d+)", flags)
+    if m is None:
+        flags = f"{flags} {flag}={n}".strip()
+    elif int(m.group(1)) < n:  # raise an existing lower setting
+        flags = flags[: m.start()] + f"{flag}={n}" + flags[m.end():]
+    os.environ["XLA_FLAGS"] = flags
+    if len(jax.devices()) < n:
+        raise RuntimeError(
+            f"need {n} devices but jax already initialized with "
+            f"{len(jax.devices())} (XLA_FLAGS was applied too late — "
+            f"export {flag}={n} before startup)")
+
+
+def make_streaming_mesh(data: int, model: int):
+    """Mesh for the sharded streaming engine: ``data`` shards the ingest
+    stream, ``model`` cluster-shards the serving doc store."""
+    return jax.make_mesh((data, model), ("data", "model"))

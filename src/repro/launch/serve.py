@@ -2,13 +2,25 @@
 
 Stands up the RAGServer over a simulated stream and drives a Zipf query
 workload against the live index, printing latency/recall stats.
+
+``--mesh D,M`` (e.g. ``--mesh 2,2``) serves from the sharded engine
+instead: the stream is data-sharded D ways for ingest and the document
+store is cluster-sharded M ways for two-stage retrieval. On a CPU host
+the D*M devices are forced via ``--xla_force_host_platform_device_count``
+(which is why the mesh flag is parsed before jax initializes).
 """
 from __future__ import annotations
 
 import argparse
 
-import jax
-import numpy as np
+
+def _parse_mesh(spec: str) -> tuple[int, int]:
+    parts = [int(p) for p in spec.split(",")]
+    if len(parts) == 1:
+        parts = [1, parts[0]]
+    assert len(parts) == 2 and all(p >= 1 for p in parts), \
+        "--mesh takes 'D,M' (data shards, model/store shards)"
+    return parts[0], parts[1]
 
 
 def main():
@@ -19,7 +31,24 @@ def main():
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--qps", type=int, default=32, help="queries per batch")
     ap.add_argument("--topk", type=int, default=10)
+    ap.add_argument("--two-stage", action="store_true",
+                    help="routed two-stage retrieval (needs a doc store)")
+    ap.add_argument("--nprobe", type=int, default=8)
+    ap.add_argument("--store-depth", type=int, default=8)
+    ap.add_argument("--mesh", default="",
+                    help="'D,M' sharded engine: D data shards, M store "
+                         "shards (default: single device)")
     args = ap.parse_args()
+
+    # Device forcing must precede the first jax device query.
+    mesh_shape = _parse_mesh(args.mesh) if args.mesh else None
+    if mesh_shape is not None:
+        from repro.launch.mesh import force_host_devices
+
+        force_host_devices(mesh_shape[0] * mesh_shape[1])
+
+    import jax
+    import numpy as np
 
     from repro.configs.streaming_rag import paper_pipeline_config
     from repro.data.streams import make_stream
@@ -28,10 +57,26 @@ def main():
     stream = make_stream(args.stream, dim=args.dim)
     warm = np.concatenate(
         [stream.next_batch(args.batch)["embedding"] for _ in range(2)])
-    cfg = paper_pipeline_config(dim=args.dim, k=150, capacity=100,
-                                update_interval=256, alpha=0.1)
-    server = RAGServer(cfg, ServerConfig(max_batch=args.qps, topk=args.topk),
-                       jax.random.key(0), warmup=warm)
+    k = 150
+    if mesh_shape is not None:  # cluster sharding needs k % M == 0
+        m = mesh_shape[1]
+        k = -(-k // m) * m
+    cfg = paper_pipeline_config(
+        dim=args.dim, k=k, capacity=100, update_interval=256, alpha=0.1,
+        store_depth=args.store_depth if args.two_stage else 0)
+    scfg = ServerConfig(max_batch=args.qps, topk=args.topk,
+                        two_stage=args.two_stage, nprobe=args.nprobe)
+
+    engine = None
+    if mesh_shape is not None:
+        from repro.engine.sharded import ShardedEngine
+        from repro.launch.mesh import make_streaming_mesh
+
+        mesh = make_streaming_mesh(*mesh_shape)
+        engine = ShardedEngine(cfg, mesh, jax.random.key(0), warmup=warm,
+                               reconcile_every=4)
+    server = RAGServer(cfg, scfg, jax.random.key(0), warmup=warm,
+                       engine=engine)
 
     answered = 0
     for i in range(args.batches):
@@ -44,13 +89,14 @@ def main():
 
     outs = server.flush()
     answered += len(outs)
-    lat = server.stats["query_latency_ms"]
+    lat = server.latency_stats()
     print(f"docs ingested    : {server.stats['docs']}")
     print(f"queries answered : {answered}")
-    print(f"batch latency ms : p50={np.percentile(lat, 50):.2f} "
-          f"p99={np.percentile(lat, 99):.2f}")
-    print(f"index size       : "
-          f"{int(np.asarray(server.state.index.valid).sum())} prototypes")
+    print(f"batch latency ms : mean={lat['mean_ms']:.2f} "
+          f"p50={lat['p50_ms']:.2f} p99={lat['p99_ms']:.2f}")
+    print(f"index size       : {server.engine.index_size()} prototypes")
+    if mesh_shape is not None:
+        print(f"store bytes/dev  : {server.engine.store_bytes_per_device()}")
 
 
 if __name__ == "__main__":

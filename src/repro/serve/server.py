@@ -1,15 +1,20 @@
 """Batched streaming-RAG serving.
 
-Couples the ingest pipeline with a micro-batching query front end:
+Couples a streaming engine with a micro-batching query front end:
 requests are queued, batched up to (max_batch, max_wait), embedded (if an
 encoder is attached), answered from the live index, and the ingest path
 keeps absorbing stream batches between query rounds — the paper's "index
 refresh without interrupting queries" (functional state swaps are atomic
 by construction).
 
-Retrieval mode is selectable: prototype-only (one representative doc per
-cluster) or routed two-stage (prototype router + exact rerank over the
-per-cluster document store) via ``ServerConfig.two_stage``.
+The server is built on the engine protocol (``ingest`` / ``query`` /
+``index_size``), not on the pipeline functions directly: pass any engine
+— the default single-device ``engine.Engine`` or a mesh-backed
+``engine.sharded.ShardedEngine`` — and the batching/latency front end is
+identical. Retrieval mode is selectable: prototype-only (one
+representative doc per cluster) or routed two-stage (prototype router +
+exact rerank over the per-cluster document store) via
+``ServerConfig.two_stage``.
 
 Latency accounting is bounded: per-batch query latencies land in a
 fixed-size deque (``latency_window``) and are summarized by
@@ -24,10 +29,10 @@ import time
 from typing import Callable
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pipeline
+from repro.engine.engine import Engine
 
 
 @dataclasses.dataclass
@@ -42,8 +47,13 @@ class ServerConfig:
 
 class RAGServer:
     def __init__(self, cfg: pipeline.PipelineConfig, server_cfg: ServerConfig,
-                 key: jax.Array, warmup=None,
-                 embed_fn: Callable[[np.ndarray], np.ndarray] | None = None):
+                 key: jax.Array | None = None, warmup=None,
+                 embed_fn: Callable[[np.ndarray], np.ndarray] | None = None,
+                 engine=None):
+        if engine is not None:
+            # the construction-time asserts below must validate the config
+            # the engine will actually query with
+            assert engine.cfg == cfg, "engine.cfg disagrees with cfg"
         self.cfg = cfg
         self.scfg = server_cfg
         if server_cfg.two_stage:  # fail at construction, not first flush
@@ -53,7 +63,10 @@ class RAGServer:
                 "topk must be <= nprobe * store_depth"
             assert server_cfg.nprobe <= cfg.hh.bmax(), \
                 "nprobe must be <= the prototype index capacity"
-        self.state = pipeline.init(cfg, key, warmup)
+        if engine is None:
+            assert key is not None, "either an engine or an init key"
+            engine = Engine(cfg, key, warmup)
+        self.engine = engine
         self.embed_fn = embed_fn
         self._pending: list[dict] = []
         self._lat_sum = 0.0
@@ -63,11 +76,14 @@ class RAGServer:
                 collections.deque(maxlen=server_cfg.latency_window),
         }
 
+    @property
+    def state(self):
+        """Single-device engine state (back-compat accessor)."""
+        return self.engine.state
+
     # ---------------------------------------------------------------- ingest
     def ingest(self, embeddings: np.ndarray, doc_ids: np.ndarray):
-        self.state, _ = pipeline.ingest_batch(
-            self.cfg, self.state, jnp.asarray(embeddings),
-            jnp.asarray(doc_ids, jnp.int32))
+        self.engine.ingest(embeddings, doc_ids)
         self.stats["docs"] += len(doc_ids)
 
     # ----------------------------------------------------------------- query
@@ -97,10 +113,9 @@ class RAGServer:
         else:
             q = np.stack(raw)
         t0 = time.perf_counter()
-        scores, rows, ids, labels = pipeline.query(
-            self.cfg, self.state, jnp.asarray(q, jnp.float32),
-            self.scfg.topk, two_stage=self.scfg.two_stage,
-            nprobe=self.scfg.nprobe)
+        scores, rows, ids, labels = self.engine.query(
+            np.asarray(q, np.float32), self.scfg.topk,
+            two_stage=self.scfg.two_stage, nprobe=self.scfg.nprobe)
         jax.block_until_ready(scores)
         lat = (time.perf_counter() - t0) * 1e3
         self.stats["queries"] += len(batch)

@@ -22,6 +22,7 @@ from __future__ import annotations
 import dataclasses
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import l2_normalize
@@ -95,6 +96,72 @@ def add_batch(
                                               mode="drop"),
         ptr=store.ptr + per_cluster,
     )
+
+
+def merge_stacked(cfg: StoreConfig, stores: DocStore) -> DocStore:
+    """Exact merge of S shard-local stores (leaves stacked on a leading
+    shard axis) into the store a single sequential writer would hold.
+
+    Per cluster, the union of the shards' ring entries is ordered by
+    arrival stamp (ties break deterministically by (shard, slot), matching
+    a shard-major interleave of simultaneous arrivals) and the newest
+    ``depth`` survive. The merged write counter is the sum of shard
+    counters, and entries are placed so the newest sits at slot
+    ``(ptr - 1) % depth`` — i.e. exactly the ring a single writer that saw
+    the merged arrival order would leave behind, so post-merge ring writes
+    continue with sequential semantics. This is exact because any one of
+    the globally-newest ``depth`` docs of a cluster is necessarily among
+    its own shard's newest ``depth``.
+
+    Used by ``engine.sharded`` reconciliation (inside shard_map, after an
+    all_gather of the shard stores) and by the host-side oracle in tests.
+    """
+    if cfg.depth == 0:
+        return jax.tree.map(lambda a: a[0], stores)
+    S = stores.ids.shape[0]
+    k, depth, d = cfg.num_clusters, cfg.depth, cfg.dim
+    flat = S * depth
+
+    # [k, S*depth] entry tables, shard-major (tie-break order)
+    ids = stores.ids.transpose(1, 0, 2).reshape(k, flat)
+    stamps = stores.stamps.transpose(1, 0, 2).reshape(k, flat)
+    embs = stores.embs.transpose(1, 0, 2, 3).reshape(k, flat, d)
+
+    key = jnp.where(ids >= 0, stamps, jnp.int32(-(2**31)))  # dead sort first
+    order = jnp.argsort(key, axis=1)[:, -depth:]   # newest `depth`, stable
+    sel_ids = jnp.take_along_axis(ids, order, axis=1)
+    sel_stamps = jnp.take_along_axis(stamps, order, axis=1)
+    sel_embs = jnp.take_along_axis(embs, order[..., None], axis=1)
+    live = sel_ids >= 0
+
+    # ring placement: window position i -> slot (ptr - depth + i) % depth,
+    # gathered as out[:, s] = window[:, (s - ptr) % depth]
+    ptr = jnp.sum(stores.ptr, axis=0).astype(jnp.int32)
+    s_idx = jnp.arange(depth, dtype=jnp.int32)[None, :]
+    i = (s_idx - ptr[:, None]) % depth
+    return DocStore(
+        embs=jnp.take_along_axis(
+            jnp.where(live[..., None], sel_embs, 0.0), i[..., None], axis=1),
+        ids=jnp.take_along_axis(jnp.where(live, sel_ids, -1), i, axis=1),
+        stamps=jnp.take_along_axis(jnp.where(live, sel_stamps, -1), i, axis=1),
+        ptr=ptr,
+    )
+
+
+def shard_slice(cfg: StoreConfig, store: DocStore, shard: jnp.ndarray,
+                n_shards: int) -> DocStore:
+    """Cluster-range slice [shard*k/n, (shard+1)*k/n) of a full store —
+    the per-device serving shard when rings are cluster-sharded."""
+    assert cfg.num_clusters % n_shards == 0, \
+        "num_clusters must divide evenly across store shards"
+    kl = cfg.num_clusters // n_shards
+    start = shard * kl
+
+    def slc(a):
+        return jax.lax.dynamic_slice_in_dim(a, start, kl, axis=0)
+
+    return DocStore(embs=slc(store.embs), ids=slc(store.ids),
+                    stamps=slc(store.stamps), ptr=slc(store.ptr))
 
 
 def live_mask(store: DocStore) -> jnp.ndarray:

@@ -26,9 +26,18 @@ import jax
 import numpy as np
 
 
+def _is_key(leaf) -> bool:
+    """Typed PRNG key leaves (e.g. PipelineState.rng) need key_data() to
+    become numpy-serializable."""
+    return (hasattr(leaf, "dtype")
+            and jax.numpy.issubdtype(leaf.dtype, jax.dtypes.prng_key))
+
+
 def _flatten(tree) -> dict[str, Any]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
-    return {jax.tree_util.keystr(path): leaf for path, leaf in flat}
+    return {jax.tree_util.keystr(path):
+            (jax.random.key_data(leaf) if _is_key(leaf) else leaf)
+            for path, leaf in flat}
 
 
 def _key_of(path) -> str:
@@ -118,8 +127,11 @@ class CheckpointManager:
             key = _key_of(path)
             if key not in arrays:
                 raise KeyError(f"checkpoint missing {key}")
-            arr = arrays[key].astype(leaf.dtype) if hasattr(leaf, "dtype") \
-                else arrays[key]
+            if _is_key(leaf):  # re-wrap raw key data as a typed PRNG key
+                arr = jax.random.wrap_key_data(jax.numpy.asarray(arrays[key]))
+            else:
+                arr = arrays[key].astype(leaf.dtype) if hasattr(leaf, "dtype") \
+                    else arrays[key]
             if flat_shard is not None:
                 arr = jax.device_put(arr, flat_shard[i][1])
             leaves.append(arr)
