@@ -23,7 +23,8 @@ def _tables():
                             table9_adaptive_ablation,
                             table10_11_pca_sensitivity,
                             table12_component_ablation, table13_downstream,
-                            table14_two_stage, table15_sharded)
+                            table14_two_stage, table15_sharded,
+                            table16_async_serving)
     scale = 0.5 if FAST else 1.0
 
     def n(x):
@@ -42,6 +43,7 @@ def _tables():
         ("table13", lambda: table13_downstream.run(n_batches=n(40))),
         ("table14", lambda: table14_two_stage.run(n_batches=n(40))),
         ("table15", lambda: table15_sharded.run(n_batches=n(24))),
+        ("table16", lambda: table16_async_serving.run(n_batches=n(24))),
         ("fig3", lambda: fig3_hyperparams.run(n_batches=n(20))),
     ]
 

@@ -120,23 +120,34 @@ def _pca_topn(buf: jnp.ndarray, fill: jnp.ndarray, n: int) -> jnp.ndarray:
 
 
 def ingest(
-    cfg: PrefilterConfig, state: PrefilterState, x: jnp.ndarray
+    cfg: PrefilterConfig, state: PrefilterState, x: jnp.ndarray,
+    mask: jnp.ndarray | None = None,
 ) -> PrefilterState:
     """Push a microbatch into the sliding window; refresh basis every T arrivals.
 
-    Non-adaptive bases are static: this is a no-op then.
+    ``mask`` ([B] bool, optional) drops rows from the window entirely —
+    ragged-batch padding rows (doc_id < 0) must not enter the PCA basis.
+    Masked-out rows consume no ring slot and no arrival count, so a padded
+    batch whose pads sit at the tail advances the window exactly like the
+    unpadded batch would. Non-adaptive bases are static: this is a no-op
+    then.
     """
     if cfg.basis != "adaptive":
         return state
 
     B = x.shape[0]
     W = state.window_buf.shape[0]
-    # Ring-buffer write of the batch (vectorized scatter with wraparound).
-    idx = (state.write_ptr + jnp.arange(B)) % W
-    buf = state.window_buf.at[idx].set(x.astype(jnp.float32))
-    ptr = (state.write_ptr + B) % W
-    fill = jnp.minimum(state.fill + B, W)
-    since = state.since_update + B
+    if mask is None:
+        mask = jnp.ones((B,), bool)
+    n = jnp.sum(mask.astype(jnp.int32))
+    # Ring-buffer write of the batch (vectorized scatter with wraparound);
+    # masked rows are routed to the out-of-range drop index.
+    rank = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    idx = jnp.where(mask, (state.write_ptr + rank) % W, W)
+    buf = state.window_buf.at[idx].set(x.astype(jnp.float32), mode="drop")
+    ptr = (state.write_ptr + n) % W
+    fill = jnp.minimum(state.fill + n, W)
+    since = state.since_update + n
 
     def refresh(_):
         return _pca_topn(buf, fill, cfg.num_vectors), jnp.int32(0)

@@ -14,18 +14,42 @@ device mesh.
 """
 from __future__ import annotations
 
+import functools
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
 
-from repro.core import pipeline
+from repro.core import index as index_lib, pipeline
 from repro.engine import stages
 from repro.kernels.common import l2_normalize
 from repro.store import docstore
 
 
+class ServingSnapshot(NamedTuple):
+    """The immutable queryable state a streaming engine publishes.
+
+    Queries read ONLY published snapshots (atomic reference swap on the
+    host), never the live ingest state — the async runtime's "index
+    refresh without interrupting queries". ``version`` is a host-side
+    publish sequence number (not a device array; it never enters jit).
+    """
+
+    index: index_lib.FlatIndex   # replicated across devices
+    route_labels: jnp.ndarray    # [bmax] i32 slot -> cluster (-1 dead)
+    store: docstore.DocStore     # full, or cluster-sharded over "model"
+    version: int = 0
+
+
 def ingest_impl(cfg: "pipeline.PipelineConfig", state: "pipeline.PipelineState",
                 x: jnp.ndarray, doc_ids: jnp.ndarray):
     """Process one microbatch of embeddings [B, d] with external ids [B] i32.
+
+    Rows with ``doc_ids < 0`` are *dead* (ragged-batch padding): they never
+    touch the prefilter window, centroids, counters, representatives, or
+    the doc store, and they don't count as arrivals — only the per-item
+    counter rng stream still advances (it is split per batch slot). Live
+    batches (all ids >= 0) behave exactly as before.
 
     Returns (new_state, info dict of per-batch diagnostics).
     """
@@ -33,7 +57,9 @@ def ingest_impl(cfg: "pipeline.PipelineConfig", state: "pipeline.PipelineState",
     k = cfg.clus.num_clusters
     rng, k_hh = jax.random.split(state.rng)
 
-    pre, r, keep = stages.screen(cfg.pre, state.pre, x)
+    live = doc_ids >= 0
+    n_live = jnp.sum(live.astype(jnp.int32))
+    pre, r, keep = stages.screen(cfg.pre, state.pre, x, live)
     clus, labels, sims = stages.assign_update(cfg.clus, state.clus, x, keep)
     hh, masked_labels, hh_info = stages.count(cfg.hh, state.hh, labels, keep,
                                               k_hh)
@@ -41,11 +67,12 @@ def ingest_impl(cfg: "pipeline.PipelineConfig", state: "pipeline.PipelineState",
         state.rep_ids, state.rep_sims, labels, sims, doc_ids, keep, k)
 
     stored = keep & (hh_info["admitted"] | hh_info["hit"])
-    stamps = state.arrivals + jnp.arange(B, dtype=jnp.int32)
+    # arrival index among live rows (== arange(B) for an unpadded batch)
+    stamps = state.arrivals + jnp.cumsum(live.astype(jnp.int32)) - 1
     store = stages.store_write(cfg.store, state.store, x, labels, stored,
                                doc_ids, stamps)
 
-    since = state.since_upsert + B
+    since = state.since_upsert + n_live
     refresh = since >= cfg.update_interval
     new_index, route_labels = jax.lax.cond(
         refresh,
@@ -58,7 +85,7 @@ def ingest_impl(cfg: "pipeline.PipelineConfig", state: "pipeline.PipelineState",
         pre=pre, clus=clus, hh=hh, index=new_index, store=store,
         route_labels=route_labels,
         rep_ids=rep_ids, rep_sims=rep_sims,
-        arrivals=state.arrivals + B,
+        arrivals=state.arrivals + n_live,
         since_upsert=jnp.where(refresh, 0, since),
         kept=state.kept + jnp.sum(keep.astype(jnp.int32)),
         upserts=state.upserts + refresh.astype(jnp.int32),
@@ -98,6 +125,25 @@ def query_impl(cfg: "pipeline.PipelineConfig", state: "pipeline.PipelineState",
                                 nprobe)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "k", "two_stage", "nprobe"))
+def snapshot_query_impl(cfg: "pipeline.PipelineConfig", index, route_labels,
+                        store, q: jnp.ndarray, k: int, *, two_stage: bool,
+                        nprobe: int):
+    """``query_impl`` over a published ServingSnapshot's leaves (the same
+    stage composition, reading snapshot state instead of live state)."""
+    if not two_stage:
+        scores, rows, ids = index_lib.search(cfg.index, index, q, k)
+        return scores, rows, ids, route_labels[rows]
+    depth = cfg.store_depth
+    assert depth > 0, "two_stage requires store_depth > 0"
+    assert k <= nprobe * depth, "k must be <= nprobe * store_depth"
+    routes = stages.route(cfg.index, index, route_labels, q, nprobe)
+    qn = l2_normalize(q)
+    scores, pos = stages.rerank(store, qn, routes, k, cfg.clus.use_pallas)
+    return stages.decode_rerank(store.ids, routes, scores, pos, depth, nprobe)
+
+
 class Engine:
     """Single-device streaming engine: (cfg, PipelineState) behind the
     serving protocol. ``ShardedEngine`` implements the same protocol over
@@ -109,6 +155,7 @@ class Engine:
         self.cfg = cfg
         self.state = (pipeline.init(cfg, key, warmup)
                       if state is None else state)
+        self._version = 0
 
     def ingest(self, x: jnp.ndarray, doc_ids: jnp.ndarray) -> dict:
         self.state, info = pipeline.ingest_batch(
@@ -121,9 +168,33 @@ class Engine:
         return pipeline.query(self.cfg, self.state, jnp.asarray(q),
                               k, two_stage=two_stage, nprobe=nprobe)
 
-    def index_size(self) -> int:
-        from repro.core import index as index_lib
+    def publish(self) -> ServingSnapshot:
+        """Copy the queryable sub-state into an immutable serving snapshot.
 
+        The copy decouples the snapshot from ingest buffer donation:
+        ``pipeline.ingest_batch`` donates the previous state, so a snapshot
+        that aliased it would be invalidated by the very next ingest step —
+        exactly the torn read the async runtime must never produce.
+        """
+        st = self.state
+        self._version += 1
+        return ServingSnapshot(
+            index=jax.tree.map(jnp.copy, st.index),
+            route_labels=jnp.copy(st.route_labels),
+            store=jax.tree.map(jnp.copy, st.store),
+            version=self._version,
+        )
+
+    def query_snapshot(self, snap: ServingSnapshot, q: jnp.ndarray,
+                       k: int = 10, *, two_stage: bool = False,
+                       nprobe: int = 8):
+        """Same contract as ``query``, answered from a published snapshot."""
+        return snapshot_query_impl(
+            self.cfg, snap.index, snap.route_labels, snap.store,
+            jnp.asarray(q, jnp.float32), k, two_stage=two_stage,
+            nprobe=nprobe)
+
+    def index_size(self) -> int:
         return int(index_lib.size(self.state.index))
 
     def state_memory_bytes(self) -> int:

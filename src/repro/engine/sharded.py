@@ -27,10 +27,29 @@ Execution model (DESIGN.md §5, extended):
               merge (``collectives.distributed_rerank_topk``) whose
               tie-breaking is bit-identical to the single-device path.
 
+Reconciliation has two publication modes:
+
+  * ``full``  — rebuild the snapshot from scratch (all-gather every shard
+              sub-state, merge everything). Always exact; O(full state)
+              gather + merge per publish.
+  * ``delta`` — per-cluster dirty tracking: a cluster is dirty iff some
+              shard processed a kept document for it since the last
+              publish (cluster counts are monotone per kept assignment,
+              so comparing (counts, store ptr, rep ids) signatures is an
+              exact change detector). Only the dirty clusters' centroids,
+              rep-ids and ring buffers are gathered, re-merged, and
+              scattered into the *previous* snapshot; the counter merge +
+              routing snapshot stay full (they are O(Bmax), tiny). Dirty
+              counts are bucketed to powers of two so the jitted delta
+              step compiles O(log k) times. Delta publications are
+              bit-identical to full rebuilds (pinned by test) because the
+              merges are independent per cluster row and clean clusters'
+              merged values cannot have changed.
+
 The host-side ``reconcile_states`` is the single source of truth for
 merge semantics: the distributed path all-gathers shard states and runs
-the very same function, so the mesh execution equals the host oracle
-leaf-for-leaf.
+the very same merge composition, so the mesh execution equals the host
+oracle leaf-for-leaf.
 """
 from __future__ import annotations
 
@@ -39,24 +58,18 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
-from typing import NamedTuple
 
 from repro.core import clustering, heavy_hitter, index as index_lib, pipeline
 from repro.distributed import sharding as shard_rules
 from repro.distributed.collectives import (compat_shard_map,
                                            distributed_rerank_topk)
 from repro.engine import stages
-from repro.engine.engine import ingest_impl
+from repro.engine.engine import ServingSnapshot, ingest_impl
 from repro.kernels.common import l2_normalize
 from repro.store import docstore
 
-
-class ServingSnapshot(NamedTuple):
-    """The queryable state published by reconciliation."""
-
-    index: index_lib.FlatIndex   # replicated
-    route_labels: jnp.ndarray    # [bmax] i32, replicated
-    store: docstore.DocStore     # cluster-sharded over the model axis
+__all__ = ["ServingSnapshot", "ShardedEngine", "reconcile_states",
+           "reconcile_stacked_states"]
 
 
 # ---------------------------------------------------------------- pure merges
@@ -84,18 +97,26 @@ def _merge_counters_stacked(hh_cfg: heavy_hitter.HHConfig, stacked
     return merged
 
 
+def _merge_shard_states(cfg: pipeline.PipelineConfig, clus, hh, rep_ids,
+                        store):
+    """The four shard-state merges behind reconciliation, in one place:
+    (merged ClusterState, merged HHState, merged rep_ids, merged store)."""
+    return (_merge_clusters_stacked(clus),
+            _merge_counters_stacked(cfg.hh, hh),
+            jnp.max(rep_ids, axis=0),
+            docstore.merge_stacked(cfg.store, store))
+
+
 def reconcile_states(cfg: pipeline.PipelineConfig, clus, hh, rep_ids,
                      store) -> ServingSnapshot:
     """Merge S shard-local pipeline sub-states (cluster, counter, rep-id
     and store leaves stacked on a leading shard axis) into one
     globally-consistent serving snapshot with the FULL (unsharded) doc
     store. Pure and deterministic — the shard_map reconcile path
-    all-gathers and calls exactly this, so distributed reconciliation
-    equals this host-side oracle leaf-for-leaf."""
-    m_clus = _merge_clusters_stacked(clus)
-    m_hh = _merge_counters_stacked(cfg.hh, hh)
-    m_rep = jnp.max(rep_ids, axis=0)
-    m_store = docstore.merge_stacked(cfg.store, store)
+    all-gathers and runs exactly this merge composition, so distributed
+    reconciliation equals this host-side oracle leaf-for-leaf."""
+    m_clus, m_hh, m_rep, m_store = _merge_shard_states(cfg, clus, hh,
+                                                       rep_ids, store)
     index, route_labels = stages.upsert_snapshot(
         cfg.index, index_lib.init(cfg.index), m_hh, m_clus.centroids, m_rep)
     return ServingSnapshot(index=index, route_labels=route_labels,
@@ -124,7 +145,8 @@ class ShardedEngine:
     def __init__(self, cfg: pipeline.PipelineConfig, mesh, key: jax.Array,
                  *, warmup: jnp.ndarray | None = None,
                  data_axis: str = "data", model_axis: str = "model",
-                 reconcile_every: int = 1):
+                 reconcile_every: int = 1, reconcile_mode: str = "full",
+                 delta_max_frac: float = 0.5, delta_bucket_min: int = 32):
         sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
         self.cfg = cfg
         self.mesh = mesh
@@ -134,9 +156,23 @@ class ShardedEngine:
         self.n_model = sizes.get(model_axis, 1)
         assert cfg.clus.num_clusters % self.n_model == 0, \
             "num_clusters must divide the model axis for cluster sharding"
+        assert reconcile_mode in ("full", "delta"), reconcile_mode
         self.reconcile_every = max(1, reconcile_every)
+        self.reconcile_mode = reconcile_mode
+        # delta publishes fall back to a full rebuild above this dirty frac
+        # (the gather-the-dirty-rows plan stops paying once most rows move);
+        # dirty buckets are floored so sparse publishes share one compile
+        self.delta_max_frac = delta_max_frac
+        self.delta_bucket_min = delta_bucket_min
         self._batches_since_reconcile = 0
         self.serving: ServingSnapshot | None = None
+        self._publish_version = 0
+        # delta-publication state: merged (centroids, rep_ids, raw counter
+        # slot labels) from the last publish + the host-side per-shard
+        # (counts, store ptr, rep_ids) signature the dirty mask diffs.
+        self._pub_cache = None
+        self._pub_sig = None
+        self._delta_fns: dict = {}
 
         # All shards start from ONE shared init (identical centroids /
         # prefilter basis / counters) and diverge only through their
@@ -188,6 +224,9 @@ class ShardedEngine:
         return jax.jit(run, donate_argnums=(0,))
 
     def _build_reconcile(self):
+        """Full snapshot rebuild. Besides the snapshot parts it returns the
+        merged (centroids, rep_ids, raw counter labels) that seed the
+        delta-publication cache."""
         cfg = self.cfg
         data_axis, model_axis = self.data_axis, self.model_axis
         n_model = self.n_model
@@ -199,26 +238,100 @@ class ShardedEngine:
                 sub = jax.lax.all_gather(sub, data_axis)
             else:
                 sub = jax.tree.map(lambda a: a[None], sub)
-            snap = reconcile_states(cfg, *sub)
+            m_clus, m_hh, m_rep, m_store = _merge_shard_states(cfg, *sub)
+            index, route_labels = stages.upsert_snapshot(
+                cfg.index, index_lib.init(cfg.index), m_hh,
+                m_clus.centroids, m_rep)
             shard = (jax.lax.axis_index(model_axis)
                      if model_axis else jnp.int32(0))
-            store = docstore.shard_slice(cfg.store, snap.store, shard,
-                                         n_model)
-            return snap._replace(store=store)
+            store = docstore.shard_slice(cfg.store, m_store, shard, n_model)
+            return (index, route_labels, store, m_clus.centroids, m_rep,
+                    m_hh.labels)
 
         def run(stacked):
-            out_specs = ServingSnapshot(
-                index=shard_rules.leading_axis_pspecs(
-                    self._abstract_index(), None),
-                route_labels=P(),
-                store=shard_rules.leading_axis_pspecs(
-                    docstore.init(cfg.store), model_axis))
+            out_specs = (
+                shard_rules.leading_axis_pspecs(self._abstract_index(), None),
+                P(),
+                shard_rules.leading_axis_pspecs(docstore.init(cfg.store),
+                                                model_axis),
+                P(), P(), P())
             fn = compat_shard_map(
                 shard_fn, mesh=self.mesh,
                 in_specs=(shard_rules.leading_axis_pspecs(
                     stacked, data_axis),),
                 out_specs=out_specs, check_vma=False)
             return fn(stacked)
+
+        return jax.jit(run)
+
+    def _build_delta_reconcile(self, n_dirty: int):
+        """Delta publication for a (static) dirty bucket of ``n_dirty``
+        clusters: gather ONLY the dirty clusters' shard rows, re-merge
+        them, and scatter into the previous snapshot. ``dirty`` entries
+        equal to k are padding and drop out of every scatter."""
+        cfg = self.cfg
+        data_axis, model_axis = self.data_axis, self.model_axis
+        k = cfg.clus.num_clusters
+        kl = k // self.n_model
+
+        def shard_fn(stacked, dirty, prev_index, prev_slots,
+                     prev_store, pub_cent, pub_rep):
+            state = jax.tree.map(lambda a: a[0], stacked)
+            dc = jnp.minimum(dirty, k - 1)  # clipped gather (pads re-merge
+            #                                 row k-1 and are then dropped)
+            sub = ((state.clus.centroids[dc], state.clus.counts[dc],
+                    state.rep_ids[dc]),
+                   jax.tree.map(lambda a: a[dc], state.store),
+                   state.hh)
+            if data_axis is not None:
+                sub = jax.lax.all_gather(sub, data_axis)
+            else:
+                sub = jax.tree.map(lambda a: a[None], sub)
+            (s_cent, s_cnt, s_rep), s_store, s_hh = sub
+
+            # counter merge stays full — O(S * Bmax), tiny
+            m_hh = _merge_counters_stacked(cfg.hh, s_hh)
+            # dirty-row cluster merge (the same math as
+            # _merge_clusters_stacked, on the gathered row subset)
+            n = jnp.sum(s_cnt, axis=0)
+            wsum = jnp.sum(s_cent * s_cnt[..., None], axis=0)
+            m_cent = jnp.where((n > 0)[:, None],
+                               wsum / jnp.maximum(n, 1.0)[:, None], s_cent[0])
+            m_rep = jnp.max(s_rep, axis=0)
+
+            row = jnp.where(dirty >= k, k, dirty)  # k -> scatter-dropped
+            new_cent = pub_cent.at[row].set(m_cent, mode="drop")
+            new_rep = pub_rep.at[row].set(m_rep, mode="drop")
+            cluster_dirty = jnp.zeros((k,), bool).at[row].set(True,
+                                                              mode="drop")
+            index, route_labels, slot_labels = stages.delta_upsert_snapshot(
+                cfg.index, prev_index, prev_slots, m_hh, new_cent, new_rep,
+                cluster_dirty)
+
+            # dirty-row ring merge, scattered into the local store shard
+            m_rows = docstore.merge_stacked(cfg.store, s_store)
+            shard = (jax.lax.axis_index(model_axis)
+                     if model_axis else jnp.int32(0))
+            lrow = row - shard * kl
+            lrow = jnp.where((row >= k) | (lrow < 0) | (lrow >= kl), kl,
+                             lrow)
+            store = docstore.scatter_rows(prev_store, m_rows, lrow)
+            return index, route_labels, store, new_cent, new_rep, slot_labels
+
+        def run(stacked, dirty, prev_index, prev_slots, prev_store,
+                pub_cent, pub_rep):
+            index_specs = shard_rules.leading_axis_pspecs(
+                self._abstract_index(), None)
+            store_specs = shard_rules.leading_axis_pspecs(
+                docstore.init(cfg.store), model_axis)
+            fn = compat_shard_map(
+                shard_fn, mesh=self.mesh,
+                in_specs=(shard_rules.leading_axis_pspecs(stacked, data_axis),
+                          P(), index_specs, P(), store_specs, P(), P()),
+                out_specs=(index_specs, P(), store_specs, P(), P(), P()),
+                check_vma=False)
+            return fn(stacked, dirty, prev_index, prev_slots,
+                      prev_store, pub_cent, pub_rep)
 
         return jax.jit(run)
 
@@ -249,11 +362,21 @@ class ShardedEngine:
     def ingest(self, x, doc_ids):
         """Ingest one global microbatch [B, d]: split contiguously into
         ``n_data`` shard sub-batches and advance every shard's local
-        pipeline in parallel. Returns None (per-shard infos stay local)."""
+        pipeline in parallel. Ragged batches (B not a multiple of the data
+        axis) are padded with dead ``doc_id = -1`` sentinel rows — inert in
+        every ingest stage and tombstoned by the store/rerank semantics —
+        so a stream's final partial batch serves like any other. Returns
+        None (per-shard infos stay local)."""
         x = jnp.asarray(x)
         ids = jnp.asarray(doc_ids, jnp.int32)
         B = x.shape[0]
-        assert B % self.n_data == 0, "batch must divide the data axis"
+        pad = -B % self.n_data
+        if pad:  # device-resident inputs stay on device when unragged
+            x = jnp.concatenate(
+                [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+            ids = jnp.concatenate(
+                [ids, jnp.full((pad,), -1, jnp.int32)])
+            B += pad
         xs = x.reshape(self.n_data, B // self.n_data, *x.shape[1:])
         idss = ids.reshape(self.n_data, B // self.n_data)
         self.ingest_sharded(xs, idss)
@@ -268,18 +391,105 @@ class ShardedEngine:
         if self._batches_since_reconcile >= self.reconcile_every:
             self.reconcile()
 
-    def reconcile(self) -> ServingSnapshot:
-        """Publish a fresh globally-consistent serving snapshot."""
-        self.serving = self._reconcile_fn(self.local)
+    def _host_signature(self):
+        """Per-shard (cluster counts, store ptrs, rep ids) — the exact
+        change detector behind the per-cluster dirty mask. All three are
+        monotone under kept assignments, and every snapshot-visible
+        cluster mutation (centroid, ring write, representative) implies a
+        kept assignment to that cluster."""
+        return (np.asarray(self.local.clus.counts),
+                np.asarray(self.local.store.ptr),
+                np.asarray(self.local.rep_ids))
+
+    def _publish(self, index, route_labels, store) -> ServingSnapshot:
+        self._publish_version += 1
+        self.serving = ServingSnapshot(index=index,
+                                       route_labels=route_labels,
+                                       store=store,
+                                       version=self._publish_version)
         self._batches_since_reconcile = 0
         return self.serving
 
+    def reconcile(self) -> ServingSnapshot:
+        """Publish a fresh globally-consistent serving snapshot.
+
+        ``reconcile_mode="delta"``: after the first (necessarily full)
+        publish, diff the host signature to find dirty clusters and only
+        re-merge those into the previous snapshot. The dirty count is
+        bucketed to the next power of two (bounded compilations); above
+        ``delta_max_frac`` of all clusters the full rebuild is cheaper and
+        is used instead. Publications are bit-identical either way.
+        """
+        k = self.cfg.clus.num_clusters
+        dirty_idx = sig = None
+        if self.reconcile_mode == "delta" and self._pub_cache is not None:
+            sig = self._host_signature()
+            dirty = np.zeros((k,), bool)
+            for new, old in zip(sig, self._pub_sig):
+                dirty |= np.any(new != old, axis=0)
+            idx = np.nonzero(dirty)[0].astype(np.int32)
+            if idx.size == 0:
+                # no shard saw a kept doc since the last publish: the
+                # counters are untouched too, so the snapshot is already
+                # exact — republish it under a fresh version.
+                self._pub_sig = sig
+                return self._publish(self.serving.index,
+                                     self.serving.route_labels,
+                                     self.serving.store)
+            if idx.size <= self.delta_max_frac * k:
+                dirty_idx = idx
+
+        if dirty_idx is None:  # full rebuild (also seeds the delta cache)
+            out = self._reconcile_fn(self.local)
+            index, route_labels, store, m_cent, m_rep, slot_labels = out
+            self._pub_cache = (m_cent, m_rep, slot_labels)
+            if self.reconcile_mode == "delta":
+                self._pub_sig = sig if sig is not None \
+                    else self._host_signature()
+            return self._publish(index, route_labels, store)
+
+        n_bucket = min(k, max(self.delta_bucket_min,
+                              1 << (int(dirty_idx.size) - 1).bit_length()))
+        fn = self._delta_fns.get(n_bucket)
+        if fn is None:
+            fn = self._delta_fns[n_bucket] = \
+                self._build_delta_reconcile(n_bucket)
+        padded = np.full((n_bucket,), k, np.int32)
+        padded[:dirty_idx.size] = dirty_idx
+        m_cent, m_rep, slot_labels = self._pub_cache
+        index, route_labels, store, m_cent, m_rep, slot_labels = fn(
+            self.local, jnp.asarray(padded), self.serving.index,
+            slot_labels, self.serving.store, m_cent, m_rep)
+        self._pub_cache = (m_cent, m_rep, slot_labels)
+        self._pub_sig = sig
+        return self._publish(index, route_labels, store)
+
+    def prepare_publish(self):
+        """Host-blocking publish prep: wait for the in-flight ingest
+        execution the dirty signature reads. The async runtime calls this
+        OUTSIDE its dispatch lock so concurrent queries never stall
+        behind ingest execution during a publish."""
+        if self.reconcile_mode == "delta":
+            jax.block_until_ready((self.local.clus.counts,
+                                   self.local.store.ptr, self.local.rep_ids))
+
+    def publish(self) -> ServingSnapshot:
+        """Serving-protocol alias: reconcile and return the snapshot."""
+        return self.reconcile()
+
     def query(self, q, k: int = 10, *, two_stage: bool = False,
               nprobe: int = 8):
-        """Same contract as ``pipeline.query`` over the serving snapshot."""
+        """Same contract as ``pipeline.query`` over the latest snapshot."""
         if self.serving is None:
             self.reconcile()
-        snap = self.serving
+        return self.query_snapshot(self.serving, q, k, two_stage=two_stage,
+                                   nprobe=nprobe)
+
+    def query_snapshot(self, snap: ServingSnapshot, q, k: int = 10, *,
+                       two_stage: bool = False, nprobe: int = 8):
+        """Answer from an explicitly published snapshot (the async runtime
+        pins the snapshot it hands out per batch, so in-flight queries are
+        isolated from concurrent reconciles)."""
         q = jnp.asarray(q, jnp.float32)
         cfg = self.cfg
         if not two_stage:

@@ -28,16 +28,24 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import clustering, heavy_hitter, index as index_lib, prefilter
-from repro.kernels.common import NEG_INF
+from repro.kernels.common import NEG_INF, l2_normalize
 from repro.kernels.rerank.ops import rerank_topk
 from repro.store import docstore
 
 
 # --------------------------------------------------------------------- ingest
-def screen(pre_cfg: prefilter.PrefilterConfig, pre_state, x: jnp.ndarray):
-    """(1) adaptive-basis window ingest + (2) relevance screening."""
-    pre = prefilter.ingest(pre_cfg, pre_state, x)
+def screen(pre_cfg: prefilter.PrefilterConfig, pre_state, x: jnp.ndarray,
+           live: jnp.ndarray | None = None):
+    """(1) adaptive-basis window ingest + (2) relevance screening.
+
+    ``live`` ([B] bool, optional) marks real rows; dead rows (ragged-batch
+    padding, doc_id < 0) are kept out of the PCA window and forced to
+    keep=False so every downstream stage treats them as inert.
+    """
+    pre = prefilter.ingest(pre_cfg, pre_state, x, mask=live)
     r, keep = prefilter.score(pre_cfg, pre, x)
+    if live is not None:
+        keep = keep & live
     return pre, r, keep
 
 
@@ -105,6 +113,43 @@ def upsert_snapshot(index_cfg: index_lib.IndexConfig, index, hh_state,
     valid = heavy_hitter.active_mask(hh_state)
     new_index = index_lib.upsert(index_cfg, index, slots, vecs, ids, valid)
     return new_index, jnp.where(valid, lbl, -1)
+
+
+def delta_upsert_snapshot(index_cfg: index_lib.IndexConfig, prev_index,
+                          prev_slot_labels, hh_state, centroids, rep_ids,
+                          cluster_dirty):
+    """Delta form of ``upsert_snapshot``: re-upsert only the slots whose
+    content can have changed since the previous publish, reusing every
+    other row of ``prev_index`` untouched.
+
+    A slot's index row is a pure function of (its counter label, the merged
+    centroid of that label's cluster, the cluster's representative id, its
+    validity), so it is stale iff its raw counter label changed
+    (``prev_slot_labels`` is the raw ``hh.labels`` snapshot from the last
+    publish — raw, not route labels, because the full rebuild writes
+    vectors even for invalid slots), its validity flipped, or its cluster
+    is dirty (centroid/rep-id moved). Rows outside that mask are
+    bit-identical to what a full rebuild would write, which is what makes
+    delta publications exactly equal full reconciliation.
+
+    Returns (new_index, route_labels, slot_labels) — ``slot_labels`` is the
+    raw label snapshot the NEXT delta publish compares against.
+    """
+    lbl = hh_state.labels
+    valid = heavy_hitter.active_mask(hh_state)
+    lbl_c = jnp.maximum(lbl, 0)
+    stale = ((lbl != prev_slot_labels) | (valid != prev_index.valid)
+             | cluster_dirty[lbl_c])
+    vecs = (l2_normalize(centroids[lbl_c]) if index_cfg.normalize
+            else centroids[lbl_c].astype(jnp.float32))
+    new_index = index_lib.FlatIndex(
+        vectors=jnp.where(stale[:, None], vecs, prev_index.vectors),
+        ids=jnp.where(stale, jnp.where(valid, rep_ids[lbl_c], -1),
+                      prev_index.ids),
+        valid=valid,
+        version=prev_index.version,  # full rebuilds always publish 1
+    )
+    return new_index, jnp.where(valid, lbl, -1), lbl
 
 
 # ---------------------------------------------------------------------- query

@@ -1,6 +1,6 @@
 """Serving launcher: ``python -m repro.launch.serve [--stream nyt] [...]``.
 
-Stands up the RAGServer over a simulated stream and drives a Zipf query
+Stands up a RAG server over a simulated stream and drives a Zipf query
 workload against the live index, printing latency/recall stats.
 
 ``--mesh D,M`` (e.g. ``--mesh 2,2``) serves from the sharded engine
@@ -8,6 +8,13 @@ instead: the stream is data-sharded D ways for ingest and the document
 store is cluster-sharded M ways for two-stage retrieval. On a CPU host
 the D*M devices are forced via ``--xla_force_host_platform_device_count``
 (which is why the mesh flag is parsed before jax initializes).
+
+``--async`` serves through ``serve.runtime.AsyncServer``: a background
+thread ingests the stream and publishes snapshots every
+``--reconcile-every`` batches (delta publication when sharded), so
+queries answer from the latest snapshot without waiting for ingest.
+Shutdown drains the pending queue completely — the launcher asserts
+``queries answered == queries submitted``.
 """
 from __future__ import annotations
 
@@ -38,6 +45,12 @@ def main():
     ap.add_argument("--mesh", default="",
                     help="'D,M' sharded engine: D data shards, M store "
                          "shards (default: single device)")
+    ap.add_argument("--async", dest="async_serve", action="store_true",
+                    help="background ingest thread + snapshot publication "
+                         "(queries never block on ingest)")
+    ap.add_argument("--reconcile-every", type=int, default=4,
+                    help="ingest batches between snapshot publications "
+                         "(sharded reconcile / async publish cadence)")
     args = ap.parse_args()
 
     # Device forcing must precede the first jax device query.
@@ -52,7 +65,8 @@ def main():
 
     from repro.configs.streaming_rag import paper_pipeline_config
     from repro.data.streams import make_stream
-    from repro.serve.server import RAGServer, ServerConfig
+    from repro.serve.runtime import AsyncServer, ServerConfig
+    from repro.serve.server import RAGServer
 
     stream = make_stream(args.stream, dim=args.dim)
     warm = np.concatenate(
@@ -73,27 +87,47 @@ def main():
         from repro.launch.mesh import make_streaming_mesh
 
         mesh = make_streaming_mesh(*mesh_shape)
-        engine = ShardedEngine(cfg, mesh, jax.random.key(0), warmup=warm,
-                               reconcile_every=4)
-    server = RAGServer(cfg, scfg, jax.random.key(0), warmup=warm,
-                       engine=engine)
+        engine = ShardedEngine(
+            cfg, mesh, jax.random.key(0), warmup=warm,
+            # async: the runtime's publish cadence drives (delta) reconcile
+            reconcile_every=10**9 if args.async_serve
+            else args.reconcile_every,
+            reconcile_mode="delta" if args.async_serve else "full")
+    if args.async_serve:
+        server = AsyncServer(cfg, scfg, jax.random.key(0), warmup=warm,
+                             engine=engine,
+                             publish_every=args.reconcile_every)
+    else:
+        server = RAGServer(cfg, scfg, jax.random.key(0), warmup=warm,
+                           engine=engine)
 
+    submitted = 0
     answered = 0
     for i in range(args.batches):
         b = stream.next_batch(args.batch)
         qs = stream.queries(args.qps)
         for q in qs["embedding"]:
             server.submit(q)
+            submitted += 1
         outs = server.serve_round(b)
         answered += len(outs)
 
-    outs = server.flush()
-    answered += len(outs)
+    # Shutdown: drain the WHOLE pending queue (one flush answers at most
+    # max_batch and would silently drop the rest).
+    if args.async_serve:
+        server.sync()            # final publish covers the stream tail
+    answered += len(server.drain())
     lat = server.latency_stats()
     print(f"docs ingested    : {server.stats['docs']}")
-    print(f"queries answered : {answered}")
+    print(f"queries answered : {answered} / {submitted} submitted")
+    assert answered == submitted, "shutdown drain lost queries"
     print(f"batch latency ms : mean={lat['mean_ms']:.2f} "
           f"p50={lat['p50_ms']:.2f} p99={lat['p99_ms']:.2f}")
+    if args.async_serve:
+        fresh = server.freshness_stats()
+        print(f"freshness        : snapshot v{fresh['snapshot_version']} "
+              f"lag={fresh['lag_docs']} docs")
+        server.close()
     print(f"index size       : {server.engine.index_size()} prototypes")
     if mesh_shape is not None:
         print(f"store bytes/dev  : {server.engine.store_bytes_per_device()}")

@@ -1,0 +1,10 @@
+"""Serving layer: micro-batching query front end over the engine protocol.
+
+``server.RAGServer``   — synchronous event loop (ingest interleaved with
+                         query rounds on the caller's thread).
+``runtime.AsyncServer`` — background ingest thread + atomic snapshot
+                         publication; queries never block on ingest or
+                         reconcile.
+"""
+from repro.serve.runtime import AsyncServer, ServerConfig  # noqa: F401
+from repro.serve.server import RAGServer  # noqa: F401

@@ -1,0 +1,363 @@
+"""Async serving runtime: background ingest/reconcile with snapshot swaps.
+
+``RAGServer`` interleaves ingest and query on one thread, so every query
+pays for the ingest dispatch (and, sharded, the reconcile) that happens
+to sit in front of it. ``AsyncServer`` decouples the two paths — the
+paper's "index refresh without interrupting queries" as an actual server
+shape:
+
+  * a background **ingest thread** drains a bounded stream queue into the
+    engine (single-device ``Engine`` or mesh-backed ``ShardedEngine``)
+    and every ``publish_every`` batches publishes an immutable
+    ``ServingSnapshot`` through an atomic reference swap;
+  * the caller-facing **query front end** (micro-batching, monotone
+    tickets, bounded latency window) answers every batch from the one
+    snapshot reference it read at flush time — queries never block on
+    ingest or reconcile, and never observe a half-published state
+    (snapshots are functionally constructed; the swap is a single Python
+    reference assignment).
+
+The front end itself (tickets, batching, drain, latency accounting) is
+shared: ``serve.server.RAGServer`` re-bases on ``QueryFrontend`` with a
+live-state query path, so the sync and async servers differ only in
+where answers come from.
+
+Freshness is explicit, not accidental: ``freshness_stats()`` reports the
+doc lag between what was ingested and what the published snapshot
+serves, and every answer carries the ``snapshot_version`` it was served
+from — the latency/freshness trade ``benchmarks/table16_async_serving``
+measures.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.core import pipeline
+from repro.engine.engine import Engine
+
+
+@dataclasses.dataclass
+class ServerConfig:
+    max_batch: int = 64
+    max_wait_ms: float = 2.0
+    topk: int = 10
+    two_stage: bool = False    # routed two-stage retrieval (document store)
+    nprobe: int = 8            # clusters routed per query when two_stage
+    latency_window: int = 1024  # per-batch latencies kept for p50/p99
+
+
+class QueryFrontend:
+    """Micro-batching query front end shared by the sync and async servers.
+
+    Subclasses implement ``_query_batch(q) -> (scores, rows, ids, labels)``
+    (and may override ``_batch_meta()`` to tag answers). Tickets are
+    monotone for the life of the server — they never restart after a
+    flush — and each answer dict carries its ``ticket`` so callers can
+    join answers back to submissions.
+    """
+
+    def __init__(self, cfg: pipeline.PipelineConfig,
+                 server_cfg: ServerConfig,
+                 embed_fn: Callable[[np.ndarray], np.ndarray] | None = None):
+        if server_cfg.two_stage:  # fail at construction, not first flush
+            assert cfg.store_depth > 0, \
+                "two_stage serving needs a PipelineConfig with store_depth > 0"
+            assert server_cfg.topk <= server_cfg.nprobe * cfg.store_depth, \
+                "topk must be <= nprobe * store_depth"
+            assert server_cfg.nprobe <= cfg.hh.bmax(), \
+                "nprobe must be <= the prototype index capacity"
+        self.cfg = cfg
+        self.scfg = server_cfg
+        self.embed_fn = embed_fn
+        self._pending: collections.deque = collections.deque()
+        self._lock = threading.Lock()
+        self._next_ticket = 0
+        self._lat_sum = 0.0
+        self.stats = {
+            "queries": 0, "docs": 0, "batches": 0,
+            "query_latency_ms":
+                collections.deque(maxlen=server_cfg.latency_window),
+        }
+
+    # ----------------------------------------------------------------- query
+    def submit(self, query) -> int:
+        """Queue one query (text if embed_fn is set, else an embedding).
+        Returns a monotonically increasing ticket id."""
+        with self._lock:
+            ticket = self._next_ticket
+            self._next_ticket += 1
+            self._pending.append(
+                {"q": query, "t": time.perf_counter(), "ticket": ticket})
+        return ticket
+
+    def _flush_due(self) -> bool:
+        with self._lock:
+            if not self._pending:
+                return False
+            if len(self._pending) >= self.scfg.max_batch:
+                return True
+            age_ms = (time.perf_counter() - self._pending[0]["t"]) * 1e3
+        return age_ms >= self.scfg.max_wait_ms
+
+    def flush(self) -> list[dict]:
+        """Answer up to ``max_batch`` queued queries as one batch."""
+        with self._lock:
+            if not self._pending:
+                return []
+            batch = [self._pending.popleft()
+                     for _ in range(min(len(self._pending),
+                                        self.scfg.max_batch))]
+        raw = [b["q"] for b in batch]
+        if self.embed_fn is not None:
+            q = self.embed_fn(raw)
+        else:
+            q = np.stack(raw)
+        t0 = time.perf_counter()
+        scores, rows, ids, labels = self._query_batch(
+            np.asarray(q, np.float32))
+        # one host transfer per output (a per-row np.asarray in the loop
+        # below would dispatch a multi-device slice per query)
+        scores, ids, labels = (np.asarray(scores), np.asarray(ids),
+                               np.asarray(labels))
+        lat = (time.perf_counter() - t0) * 1e3
+        meta = self._batch_meta()
+        self.stats["queries"] += len(batch)
+        self.stats["batches"] += 1
+        self.stats["query_latency_ms"].append(lat)
+        self._lat_sum += lat
+        out = []
+        for i in range(len(batch)):
+            out.append({
+                "ticket": batch[i]["ticket"],
+                "scores": np.asarray(scores[i]),
+                "doc_ids": np.asarray(ids[i]),
+                "clusters": np.asarray(labels[i]),
+                "enqueue_to_answer_ms":
+                    (time.perf_counter() - batch[i]["t"]) * 1e3,
+                **meta,
+            })
+        return out
+
+    def drain(self) -> list[dict]:
+        """Flush until no query is left pending — the shutdown path.
+        A single ``flush()`` answers at most ``max_batch``; this loops so
+        no submitted query is ever silently dropped."""
+        out: list[dict] = []
+        while self._pending:
+            out.extend(self.flush())
+        return out
+
+    def latency_stats(self) -> dict:
+        """Running mean over all batches; p50/p99 over the bounded window."""
+        window = np.asarray(self.stats["query_latency_ms"], dtype=np.float64)
+        n = self.stats["batches"]
+        return {
+            "batches": n,
+            "mean_ms": self._lat_sum / n if n else 0.0,
+            "p50_ms": float(np.percentile(window, 50)) if window.size else 0.0,
+            "p99_ms": float(np.percentile(window, 99)) if window.size else 0.0,
+        }
+
+    # ------------------------------------------------------------- interface
+    def _query_batch(self, q: np.ndarray):
+        raise NotImplementedError
+
+    def _batch_meta(self) -> dict:
+        return {}
+
+
+class AsyncServer(QueryFrontend):
+    """Background-ingest serving runtime over any engine.
+
+    ``ingest`` enqueues a stream batch and returns immediately (bounded
+    queue — a full queue applies backpressure by blocking the producer,
+    never the query path). The ingest thread drains the queue into the
+    engine and publishes a snapshot every ``publish_every`` batches; the
+    final publish on ``close``/``sync`` covers the tail. ``flush``
+    answers from the snapshot reference it reads once per batch, so a
+    concurrent publish can never tear an in-flight answer.
+
+    For a ``ShardedEngine``, construct it with a huge ``reconcile_every``
+    and let the runtime's publish cadence drive reconciliation (pass
+    ``reconcile_mode="delta"`` to amortize frequent publishes).
+    """
+
+    _STOP = object()
+
+    def __init__(self, cfg: pipeline.PipelineConfig,
+                 server_cfg: ServerConfig, key: jax.Array | None = None,
+                 warmup=None,
+                 embed_fn: Callable[[np.ndarray], np.ndarray] | None = None,
+                 engine=None, publish_every: int = 4, queue_max: int = 64):
+        super().__init__(cfg, server_cfg, embed_fn)
+        if engine is not None:
+            assert engine.cfg == cfg, "engine.cfg disagrees with cfg"
+        else:
+            assert key is not None, "either an engine or an init key"
+            engine = Engine(cfg, key, warmup)
+        self.engine = engine
+        self.publish_every = max(1, publish_every)
+        self._snapshot = engine.publish()   # queries never see None
+        self._published_docs = 0
+        self._docs_ingested = 0             # ingest-thread private
+        self._since_publish = 0
+        self._error: BaseException | None = None
+        self._queue: queue.Queue = queue.Queue(maxsize=max(1, queue_max))
+        # Serializes DISPATCH (not execution) between the ingest thread
+        # and the query path: concurrently enqueueing two multi-device
+        # programs from two threads can interleave their per-device
+        # enqueue order and stall a collective behind the other program
+        # on some devices. Dispatch is asynchronous, so the lock is held
+        # only for enqueue time; execution still overlaps, and the query
+        # path never waits for ingest to *finish* — only for its enqueue.
+        self._dispatch_lock = threading.Lock()
+        self._closed = False
+        self._stop_sent = False
+        self._thread = threading.Thread(
+            target=self._ingest_loop, name="rag-ingest", daemon=True)
+        self._thread.start()
+
+    # ---------------------------------------------------------- ingest thread
+    def _ingest_loop(self):
+        try:
+            while True:
+                item = self._queue.get()
+                if item is self._STOP:
+                    self._publish()
+                    return
+                if isinstance(item, threading.Event):  # sync barrier
+                    self._publish()
+                    item.set()
+                    continue
+                x, ids = item
+                with self._dispatch_lock:
+                    self.engine.ingest(x, ids)
+                self._docs_ingested += int(np.sum(np.asarray(ids) >= 0))
+                self._since_publish += 1
+                if self._since_publish >= self.publish_every:
+                    self._publish()
+        except BaseException as e:  # surface on the caller thread
+            self._error = e
+
+    def _publish(self):
+        # capture the doc watermark BEFORE publishing: the snapshot holds
+        # at least everything ingested up to here
+        docs = self._docs_ingested
+        # host-blocking publish prep (e.g. the sharded engine's dirty
+        # signature waits on ingest execution) runs OUTSIDE the dispatch
+        # lock so a concurrent flush never stalls behind it
+        prepare = getattr(self.engine, "prepare_publish", None)
+        if prepare is not None:
+            prepare()
+        with self._dispatch_lock:
+            snap = self.engine.publish()
+        self._snapshot = snap        # atomic swap (single ref assignment)
+        self._published_docs = docs
+        self._since_publish = 0
+
+    def _check(self):
+        if self._error is not None:
+            raise RuntimeError("async ingest thread died") from self._error
+
+    def _put(self, item, timeout: float):
+        """Queue.put that can never deadlock on a dead ingest thread: a
+        plain blocking put on a full queue would hang forever once the
+        consumer has exited (e.g. after an ingest error)."""
+        deadline = time.monotonic() + timeout
+        while True:
+            self._check()
+            if not self._thread.is_alive():
+                raise RuntimeError("ingest thread is not running")
+            try:
+                self._queue.put(item, timeout=0.1)
+                return
+            except queue.Full:
+                if time.monotonic() >= deadline:
+                    raise TimeoutError("ingest queue stayed full") from None
+
+    # -------------------------------------------------------------- protocol
+    def ingest(self, embeddings: np.ndarray, doc_ids: np.ndarray,
+               timeout: float = 120.0):
+        """Enqueue one stream batch for background ingestion (bounded
+        queue: blocks the producer — never the query path — when full)."""
+        assert not self._closed, "server is closed"
+        ids = np.asarray(doc_ids)
+        self._put((np.asarray(embeddings), ids), timeout)
+        # count live rows only (doc_id < 0 is the dead/padding sentinel),
+        # mirroring _docs_ingested so freshness lag can actually reach 0
+        self.stats["docs"] += int(np.sum(ids >= 0))
+
+    def _query_batch(self, q: np.ndarray):
+        self._check()
+        snap = self._snapshot        # pin ONE snapshot for the whole batch
+        self._last_snapshot = snap
+        with self._dispatch_lock:    # enqueue-only; see __init__
+            return self.engine.query_snapshot(
+                snap, q, self.scfg.topk, two_stage=self.scfg.two_stage,
+                nprobe=self.scfg.nprobe)
+
+    def _batch_meta(self) -> dict:
+        return {"snapshot_version": self._last_snapshot.version}
+
+    def serve_round(self, stream_batch=None) -> list[dict]:
+        """Event-loop-compatible turn: answer due queries FIRST (from the
+        published snapshot — the devices are not yet busy with this
+        round's ingest), then enqueue the stream batch for background
+        ingestion. The opposite order of ``RAGServer.serve_round``, and
+        the reason queries here never pay for ingest: the interleaved
+        loop ingests in front of every flush by construction."""
+        outs = self.flush() if self._flush_due() else []
+        if stream_batch is not None:
+            self.ingest(stream_batch["embedding"], stream_batch["doc_id"])
+        return outs
+
+    # ------------------------------------------------------------- lifecycle
+    def sync(self, timeout: float = 120.0):
+        """Block until everything enqueued so far is ingested AND
+        published. Queries issued after ``sync`` see all prior docs."""
+        ev = threading.Event()
+        self._put(ev, timeout)
+        if not ev.wait(timeout):
+            self._check()
+            raise TimeoutError("ingest thread did not sync in time")
+
+    def close(self, timeout: float = 120.0):
+        """Stop the ingest thread after a final publish; idempotent once
+        the thread has actually stopped (a timed-out close can be
+        retried — ``_closed`` only flips after a successful join)."""
+        if self._closed:
+            return
+        if not self._stop_sent and self._thread.is_alive():
+            self._put(self._STOP, timeout)
+            self._stop_sent = True
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise TimeoutError("ingest thread did not stop in time")
+        self._closed = True
+        self._check()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # ------------------------------------------------------------ accounting
+    def freshness_stats(self) -> dict:
+        """How far the published snapshot trails the ingested stream."""
+        snap = self._snapshot
+        return {
+            "snapshot_version": snap.version,
+            "docs_enqueued": self.stats["docs"],
+            "docs_ingested": self._docs_ingested,
+            "docs_published": self._published_docs,
+            "lag_docs": self.stats["docs"] - self._published_docs,
+        }

@@ -1,80 +1,54 @@
-"""Batched streaming-RAG serving.
+"""Batched streaming-RAG serving (synchronous event loop).
 
-Couples a streaming engine with a micro-batching query front end:
-requests are queued, batched up to (max_batch, max_wait), embedded (if an
-encoder is attached), answered from the live index, and the ingest path
-keeps absorbing stream batches between query rounds — the paper's "index
-refresh without interrupting queries" (functional state swaps are atomic
-by construction).
+Couples a streaming engine with the micro-batching query front end from
+``serve.runtime``: requests are queued, batched up to (max_batch,
+max_wait), embedded (if an encoder is attached), answered from the live
+index, and the ingest path keeps absorbing stream batches between query
+rounds — functional state swaps are atomic by construction, so a flush
+never sees a torn index.
 
 The server is built on the engine protocol (``ingest`` / ``query`` /
 ``index_size``), not on the pipeline functions directly: pass any engine
 — the default single-device ``engine.Engine`` or a mesh-backed
-``engine.sharded.ShardedEngine`` — and the batching/latency front end is
-identical. Retrieval mode is selectable: prototype-only (one
-representative doc per cluster) or routed two-stage (prototype router +
-exact rerank over the per-cluster document store) via
-``ServerConfig.two_stage``.
+``engine.sharded.ShardedEngine`` — and the batching/ticket/latency front
+end is identical. Retrieval mode is selectable: prototype-only or routed
+two-stage via ``ServerConfig.two_stage``.
 
-Latency accounting is bounded: per-batch query latencies land in a
-fixed-size deque (``latency_window``) and are summarized by
-``latency_stats()`` (running mean + windowed p50/p99), so a long-lived
-server never grows its stats without bound.
+This is the *interleaved* server: queries answered by ``serve_round``
+still wait behind that round's ingest dispatch. ``runtime.AsyncServer``
+shares this exact front end but ingests on a background thread and
+answers from published snapshots — use it when p99 must not pay for
+ingest (benchmarks/table16_async_serving measures the difference).
+
+Tickets are monotone for the life of the server and returned in each
+answer dict; ``drain()`` loops ``flush()`` at shutdown so no pending
+query is ever dropped (a single flush answers at most ``max_batch``).
 """
 from __future__ import annotations
-
-import collections
-import dataclasses
-import time
-from typing import Callable
 
 import jax
 import numpy as np
 
 from repro.core import pipeline
 from repro.engine.engine import Engine
+from repro.serve.runtime import QueryFrontend, ServerConfig
+
+__all__ = ["RAGServer", "ServerConfig"]
 
 
-@dataclasses.dataclass
-class ServerConfig:
-    max_batch: int = 64
-    max_wait_ms: float = 2.0
-    topk: int = 10
-    two_stage: bool = False    # routed two-stage retrieval (document store)
-    nprobe: int = 8            # clusters routed per query when two_stage
-    latency_window: int = 1024  # per-batch latencies kept for p50/p99
-
-
-class RAGServer:
+class RAGServer(QueryFrontend):
     def __init__(self, cfg: pipeline.PipelineConfig, server_cfg: ServerConfig,
                  key: jax.Array | None = None, warmup=None,
-                 embed_fn: Callable[[np.ndarray], np.ndarray] | None = None,
-                 engine=None):
+                 embed_fn=None, engine=None):
+        super().__init__(cfg, server_cfg, embed_fn)
         if engine is not None:
-            # the construction-time asserts below must validate the config
-            # the engine will actually query with
+            # the construction-time asserts must validate the config the
+            # engine will actually query with
             assert engine.cfg == cfg, "engine.cfg disagrees with cfg"
-        self.cfg = cfg
-        self.scfg = server_cfg
-        if server_cfg.two_stage:  # fail at construction, not first flush
-            assert cfg.store_depth > 0, \
-                "two_stage serving needs a PipelineConfig with store_depth > 0"
-            assert server_cfg.topk <= server_cfg.nprobe * cfg.store_depth, \
-                "topk must be <= nprobe * store_depth"
-            assert server_cfg.nprobe <= cfg.hh.bmax(), \
-                "nprobe must be <= the prototype index capacity"
-        if engine is None:
+        else:
             assert key is not None, "either an engine or an init key"
             engine = Engine(cfg, key, warmup)
         self.engine = engine
-        self.embed_fn = embed_fn
-        self._pending: list[dict] = []
-        self._lat_sum = 0.0
-        self.stats = {
-            "queries": 0, "docs": 0, "batches": 0,
-            "query_latency_ms":
-                collections.deque(maxlen=server_cfg.latency_window),
-        }
 
     @property
     def state(self):
@@ -87,62 +61,10 @@ class RAGServer:
         self.stats["docs"] += len(doc_ids)
 
     # ----------------------------------------------------------------- query
-    def submit(self, query) -> int:
-        """Queue one query (text if embed_fn is set, else an embedding).
-        Returns a ticket id."""
-        self._pending.append({"q": query, "t": time.perf_counter()})
-        return len(self._pending) - 1
-
-    def _flush_due(self) -> bool:
-        if not self._pending:
-            return False
-        if len(self._pending) >= self.scfg.max_batch:
-            return True
-        age_ms = (time.perf_counter() - self._pending[0]["t"]) * 1e3
-        return age_ms >= self.scfg.max_wait_ms
-
-    def flush(self) -> list[dict]:
-        """Answer all queued queries as one batch."""
-        if not self._pending:
-            return []
-        batch, self._pending = (self._pending[: self.scfg.max_batch],
-                                self._pending[self.scfg.max_batch:])
-        raw = [b["q"] for b in batch]
-        if self.embed_fn is not None:
-            q = self.embed_fn(raw)
-        else:
-            q = np.stack(raw)
-        t0 = time.perf_counter()
-        scores, rows, ids, labels = self.engine.query(
-            np.asarray(q, np.float32), self.scfg.topk,
-            two_stage=self.scfg.two_stage, nprobe=self.scfg.nprobe)
-        jax.block_until_ready(scores)
-        lat = (time.perf_counter() - t0) * 1e3
-        self.stats["queries"] += len(batch)
-        self.stats["batches"] += 1
-        self.stats["query_latency_ms"].append(lat)
-        self._lat_sum += lat
-        out = []
-        for i in range(len(batch)):
-            out.append({
-                "scores": np.asarray(scores[i]),
-                "doc_ids": np.asarray(ids[i]),
-                "clusters": np.asarray(labels[i]),
-                "enqueue_to_answer_ms":
-                    (time.perf_counter() - batch[i]["t"]) * 1e3,
-            })
-        return out
-
-    def latency_stats(self) -> dict:
-        """Running mean over all batches; p50/p99 over the bounded window."""
-        window = np.asarray(self.stats["query_latency_ms"], dtype=np.float64)
-        n = self.stats["batches"]
-        return {
-            "batches": n,
-            "mean_ms": self._lat_sum / n if n else 0.0,
-            "p50_ms": float(np.percentile(window, 50)) if window.size else 0.0,
-            "p99_ms": float(np.percentile(window, 99)) if window.size else 0.0,
-        }
+    def _query_batch(self, q: np.ndarray):
+        return self.engine.query(q, self.scfg.topk,
+                                 two_stage=self.scfg.two_stage,
+                                 nprobe=self.scfg.nprobe)
 
     def serve_round(self, stream_batch=None) -> list[dict]:
         """One event-loop turn: ingest (if a stream batch arrived), then

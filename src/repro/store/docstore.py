@@ -115,11 +115,16 @@ def merge_stacked(cfg: StoreConfig, stores: DocStore) -> DocStore:
 
     Used by ``engine.sharded`` reconciliation (inside shard_map, after an
     all_gather of the shard stores) and by the host-side oracle in tests.
+
+    The cluster dimension is taken from the leaves, not the config, so the
+    same merge runs on a *row subset*: the delta-reconcile path gathers
+    only the dirty clusters' rings ([S, D, depth, ...]) and merges those,
+    which is exact because the merge is independent per cluster row.
     """
     if cfg.depth == 0:
         return jax.tree.map(lambda a: a[0], stores)
-    S = stores.ids.shape[0]
-    k, depth, d = cfg.num_clusters, cfg.depth, cfg.dim
+    S, k = stores.ids.shape[0], stores.ids.shape[1]
+    depth, d = cfg.depth, cfg.dim
     flat = S * depth
 
     # [k, S*depth] entry tables, shard-major (tie-break order)
@@ -145,6 +150,19 @@ def merge_stacked(cfg: StoreConfig, stores: DocStore) -> DocStore:
         ids=jnp.take_along_axis(jnp.where(live, sel_ids, -1), i, axis=1),
         stamps=jnp.take_along_axis(jnp.where(live, sel_stamps, -1), i, axis=1),
         ptr=ptr,
+    )
+
+
+def scatter_rows(store: DocStore, rows: DocStore, idx: jnp.ndarray) -> DocStore:
+    """Write per-cluster rows (a DocStore whose leading axis enumerates the
+    clusters named by ``idx``) into ``store``. Out-of-range idx entries are
+    dropped — delta reconciliation uses this both for bucket padding and
+    for dirty clusters owned by another store shard."""
+    return DocStore(
+        embs=store.embs.at[idx].set(rows.embs, mode="drop"),
+        ids=store.ids.at[idx].set(rows.ids, mode="drop"),
+        stamps=store.stamps.at[idx].set(rows.stamps, mode="drop"),
+        ptr=store.ptr.at[idx].set(rows.ptr, mode="drop"),
     )
 
 

