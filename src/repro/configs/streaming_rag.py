@@ -30,6 +30,8 @@ def paper_pipeline_config(
     adaptive: bool = False,
     store_depth: int = 0,       # per-cluster doc ring (two-stage retrieval
                                 # opts in; 0 keeps prototype-only memory)
+    store_dtype: str = "fp32",  # ring precision: fp32, or int8 rings with
+                                # per-slot scales (~4x depth per byte)
 ) -> pipeline.PipelineConfig:
     return pipeline.PipelineConfig(
         pre=prefilter.PrefilterConfig(
@@ -43,6 +45,7 @@ def paper_pipeline_config(
             max_capacity=2 * capacity if adaptive else None),
         update_interval=update_interval,
         store_depth=store_depth,
+        store_dtype=store_dtype,
     )
 
 

@@ -51,6 +51,10 @@ class PipelineConfig:
     # the doc store so prototype-only configs keep the paper's memory
     # footprint; two-stage configs opt in explicitly.
     store_depth: int = 0
+    # Ring embedding precision: "fp32", or "int8" (quantize-on-admit with
+    # per-slot fp32 scales — ~4x deeper rings at the same store budget;
+    # the rerank kernel dequantizes in VMEM with fp32 accumulation).
+    store_dtype: str = "fp32"
 
     @property
     def index(self) -> index_lib.IndexConfig:
@@ -62,11 +66,13 @@ class PipelineConfig:
     def store(self) -> docstore.StoreConfig:
         return docstore.StoreConfig(
             num_clusters=self.clus.num_clusters, depth=self.store_depth,
-            dim=self.clus.dim, normalize=True)
+            dim=self.clus.dim, normalize=True,
+            store_dtype=self.store_dtype)
 
     def __post_init__(self):
         assert self.pre.dim == self.clus.dim, "prefilter/cluster dim mismatch"
         assert self.store_depth >= 0
+        assert self.store_dtype in docstore.STORE_DTYPES, self.store_dtype
 
 
 class PipelineState(NamedTuple):
@@ -187,12 +193,22 @@ def state_memory_bytes(cfg: PipelineConfig) -> int:
 def budget_to_config(memory_mb: float, dim: int = 384,
                      base: PipelineConfig | None = None) -> PipelineConfig:
     """Map a memory budget to (k, B) the way the paper's sweep does (Table 6):
-    split the budget ~80/20 between cluster prototypes and index+window."""
+    split the budget ~80/20 between cluster prototypes and index+window.
+
+    Doc-store bytes are folded into the prototype side of the split via
+    ``docstore.memory_bytes`` — each cluster pays for its full ring
+    (dtype-aware: int8 rings cost ~4x less per slot than fp32), so Table 6
+    sweeps stay honest for deep and/or quantized ring configs instead of
+    silently blowing the budget on unaccounted store bytes."""
     base = base or PipelineConfig()
     budget = memory_mb * 1e6
     per_proto = dim * 4 * 2 + 24          # centroid + index row + bookkeeping
-    # doc rings hang off clusters only — index/counter slots carry no ring
-    per_cluster = per_proto + base.store_depth * (dim * 4 + 8)
+    # doc rings hang off clusters only — index/counter slots carry no ring.
+    # One cluster's ring cost comes from the SAME accounting the state
+    # reports (emb dtype + id/stamp/scale overhead + write counter).
+    per_cluster = per_proto + docstore.memory_bytes(docstore.StoreConfig(
+        num_clusters=1, depth=base.store_depth, dim=dim,
+        store_dtype=base.store_dtype))
     k = max(16, int(budget * 0.8 / per_cluster))
     b = max(16, min(k, int(budget * 0.2 / per_proto)))
     return dataclasses.replace(

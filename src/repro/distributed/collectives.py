@@ -130,7 +130,8 @@ def distributed_mips_topk(q, index_rows, valid, k: int, axis: str = "model"):
 
 
 def distributed_rerank_topk(qn, embs, live, ids, routes, k: int,
-                            axis: str = "model", use_pallas: bool | None = None):
+                            axis: str = "model", use_pallas: bool | None = None,
+                            scales=None):
     """Distributed two-stage rerank: doc-store rings cluster-sharded over
     ``axis`` (inside shard_map). Generalizes ``distributed_mips_topk`` to
     routed ring gathers.
@@ -138,7 +139,10 @@ def distributed_rerank_topk(qn, embs, live, ids, routes, k: int,
     qn replicated [Q, d] (pre-normalized); embs [kl, depth, d] / live
     [kl, depth] / ids [kl, depth] are this shard's cluster slice (global
     clusters [off, off+kl), off = axis_index * kl); routes [Q, P]
-    replicated global cluster ids (-1 = no route).
+    replicated global cluster ids (-1 = no route). ``scales`` [kl, depth]
+    f32 carries the per-slot dequantization scales when the rings are
+    int8 (the quantized store layout) — each shard dequantizes inside its
+    local rerank kernel, so the wire and HBM only ever hold int8 rings.
 
     Each shard masks the route list to its own clusters, reranks its rings
     locally (same kernel as single-device stage 2), then the per-shard
@@ -158,7 +162,7 @@ def distributed_rerank_topk(qn, embs, live, ids, routes, k: int,
     local_routes = jnp.where((routes >= off) & (routes < off + kl),
                              routes - off, -1)
     scores, pos = rerank_topk(qn, embs, live, local_routes, k,
-                              use_pallas=use_pallas)
+                              scales=scales, use_pallas=use_pallas)
 
     # resolve each live local candidate's doc id while its ring is local
     dead = pos < 0

@@ -5,6 +5,11 @@ q(g + e_t), and e_{t+1} = (g + e_t) − dequant(q). Unbiased over time, 4×
 less collective traffic for fp32 grads (8× under the inter-pod-only mode:
 intra-pod reduces run full precision, only the slow DCN hop is quantized —
 see collectives.hierarchical_psum).
+
+The int8 rounding/scale convention is the SHARED one in ``store.quant``
+(the same convention the quantized document store uses), applied
+per-tensor here; ``quantize_int8``/``dequantize_int8`` stay re-exported
+under their historical names.
 """
 from __future__ import annotations
 
@@ -12,6 +17,8 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.store.quant import dequantize_int8, quantize_int8  # noqa: F401
 
 
 class EFState(NamedTuple):
@@ -21,18 +28,6 @@ class EFState(NamedTuple):
 def init_ef(grads_like) -> EFState:
     return EFState(error=jax.tree.map(
         lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
-
-
-def quantize_int8(x: jnp.ndarray):
-    """Per-tensor symmetric int8: (q, scale)."""
-    x32 = x.astype(jnp.float32)
-    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
-    return q, scale
-
-
-def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
-    return q.astype(jnp.float32) * scale
 
 
 def compressed_psum(x: jnp.ndarray, axis, ef_error: jnp.ndarray):

@@ -344,9 +344,12 @@ class ShardedEngine:
         use_pallas = cfg.clus.use_pallas
 
         def shard_fn(qn, routes, store):
+            scales = (store.scales if store.embs.dtype == jnp.int8
+                      else None)
             return distributed_rerank_topk(
                 qn, store.embs, docstore.live_mask(store), store.ids,
-                routes, k, model_axis, use_pallas=use_pallas)
+                routes, k, model_axis, use_pallas=use_pallas,
+                scales=scales)
 
         def run(qn, routes, store):
             fn = compat_shard_map(

@@ -166,10 +166,16 @@ def rerank(store, qn: jnp.ndarray, routes: jnp.ndarray, k: int,
            use_pallas: bool | None):
     """Stage 2: gather the routed ring buffers, exact cosine rerank.
 
+    int8 stores hand the kernel their per-slot scales; dequantization
+    happens inside the kernel with fp32 accumulation (the store's leaf
+    dtype is the single source of truth, so every composition of this
+    stage — single-device, snapshot, sharded — picks the right path).
+
     Returns (scores [Q,k] desc, pos [Q,k] = j*depth+slot into the route
     list, -1 for dead entries)."""
+    scales = store.scales if store.embs.dtype == jnp.int8 else None
     return rerank_topk(qn, store.embs, docstore.live_mask(store), routes, k,
-                       use_pallas=use_pallas)
+                       scales=scales, use_pallas=use_pallas)
 
 
 def decode_rerank(store_ids, routes, scores, pos, depth: int, nprobe: int,

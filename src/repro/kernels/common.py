@@ -17,6 +17,7 @@ NEG_INF = float(-1e30)
 # MXU/VPU-aligned tile constants for TPU v5e.
 LANE = 128
 SUBLANE_F32 = 8
+SUBLANE_I8 = 32  # int8 packs 4 values per sublane row -> (32, 128) tiles
 
 
 def cdiv(a: int, b: int) -> int:

@@ -14,12 +14,16 @@ def rerank_topk(
     routes: jnp.ndarray,
     k: int,
     *,
+    scales: jnp.ndarray | None = None,
     use_pallas: bool | None = None,
 ):
     """Exact top-k rerank of each query's routed cluster ring buffers.
 
-    q [Q, d]; embs [C, depth, d]; live [C, depth] bool;
-    routes [Q, P] i32 cluster ids per query (-1 = no route); k <= P*depth.
+    q [Q, d]; embs [C, depth, d] (f32, or i8 with per-slot ``scales``
+    [C, depth] f32 — the quantized store layout); live [C, depth] bool;
+    routes [Q, P] i32 cluster ids per query (-1 = no route);
+    k <= P*depth. int8 rings are dequantized inside the kernel with fp32
+    accumulation — no fp32 candidate tensor is materialized.
 
     Returns (scores [Q, k] f32 desc, pos [Q, k] i32) where pos encodes
     ``j * depth + slot`` into the query's route list (-1 = dead entry).
@@ -33,5 +37,5 @@ def rerank_topk(
     if use_pallas:
         from repro.kernels.rerank.rerank import rerank_topk_pallas
 
-        return rerank_topk_pallas(q, embs, live, routes, k)
-    return rerank_topk_ref(q, embs, live, routes, k)
+        return rerank_topk_pallas(q, embs, live, routes, k, scales)
+    return rerank_topk_ref(q, embs, live, routes, k, scales)

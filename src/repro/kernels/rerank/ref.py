@@ -13,15 +13,21 @@ def rerank_topk_ref(
     live: jnp.ndarray,
     routes: jnp.ndarray,
     k: int,
+    scales: jnp.ndarray | None = None,
 ):
     """Exact top-k over each query's routed ring buffers.
 
     Args:
       q: [Q, d] query vectors (pre-normalized for cosine).
-      embs: [C, depth, d] per-cluster document ring buffers.
+      embs: [C, depth, d] per-cluster document ring buffers (f32/bf16, or
+        int8 when ``scales`` is given).
       live: [C, depth] bool — slots holding a real document.
       routes: [Q, P] i32 cluster ids routed per query (-1 = no route).
       k: results per query (k <= P * depth).
+      scales: optional [C, depth] f32 per-slot dequantization scales for
+        int8 ring buffers. Scoring is ``(q · e_int8) * scale`` with fp32
+        accumulation — the same operation order as the Pallas kernel, so
+        int8 ids stay bit-stable across the two paths.
 
     Returns:
       scores: [Q, k] f32 descending (NEG_INF for dead entries).
@@ -35,6 +41,8 @@ def rerank_topk_ref(
     cand = embs[r]                                       # [Q, P, depth, d]
     s = jnp.einsum("qd,qpsd->qps", q.astype(jnp.float32),
                    cand.astype(jnp.float32))
+    if scales is not None:
+        s = s * scales[r].astype(jnp.float32)            # per-slot dequant
     ok = live[r] & (routes >= 0)[..., None]
     s = jnp.where(ok, s, NEG_INF).reshape(Q, -1)         # [Q, P*depth]
     scores, pos = jax.lax.top_k(s, k)

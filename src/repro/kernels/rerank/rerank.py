@@ -9,6 +9,14 @@ a *scalar-prefetch* operand, so the BlockSpec index map reads
 buffer into VMEM per grid step — the ``[Q, nprobe, depth, d]`` gathered
 candidate tensor never exists in HBM.
 
+Quantized stores (int8 rings + per-slot fp32 scales) ride the same
+scalar-prefetch DMA path: the int8 tile and its ``[1, depth]`` scale row
+are streamed into VMEM, the tile is widened to fp32 *inside the kernel*,
+scored on the MXU with fp32 accumulation, and the per-candidate scale is
+applied to the score row (``(q·e)·s == q·(s·e)`` up to fp rounding). No
+fp32 candidate tensor is ever materialized in HBM — HBM only ever holds
+the int8 rings.
+
 Grid: (Q, nprobe). Each step scores one query against one routed ring
 buffer on the MXU and reduces to the tile-local top-k in VMEM via k
 iterations of (row-max, min-id mask) — identical tie-breaking to the
@@ -19,8 +27,9 @@ Dead candidates (empty ring slots, sublane padding) are masked with an
 additive NEG_INF bias row; invalid routes (-1) are clamped to cluster 0
 in the index map and killed inside the kernel by reading the route's
 sign straight from the prefetched table — no store-sized sentinel copy
-is ever materialized per call (the store only gets touched when
-``depth % 8 != 0`` forces a sublane pad).
+is ever materialized per call (the store only gets touched when the
+depth misses the dtype's sublane multiple — 8 for fp32, 32 for int8 —
+and forces a sublane pad).
 """
 from __future__ import annotations
 
@@ -31,24 +40,32 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import (NEG_INF, SUBLANE_F32, interpret_mode,
-                                  pad_dim, round_up)
+from repro.kernels.common import (NEG_INF, SUBLANE_F32, SUBLANE_I8,
+                                  interpret_mode, pad_dim, round_up)
 
 
-def _rerank_kernel(routes_ref, q_ref, emb_ref, bias_ref, sc_ref, id_ref, *,
-                   depth: int, dp: int, k: int):
+def _rerank_kernel(routes_ref, q_ref, emb_ref, bias_ref, *rest, depth: int,
+                   dp: int, k: int, quantized: bool):
+    if quantized:
+        scale_ref, sc_ref, id_ref = rest
+    else:
+        sc_ref, id_ref = rest
     i = pl.program_id(0)
     j = pl.program_id(1)
     dead_route = routes_ref[i, j] < 0  # scalar read from the prefetch table
 
     q = q_ref[...].astype(jnp.float32)       # [1, d]
+    # int8 tiles widen to fp32 HERE, in VMEM — the MXU accumulates in fp32
     e = emb_ref[0].astype(jnp.float32)       # [dp, d]
     bias = bias_ref[...].astype(jnp.float32)  # [1, dp]
 
     s = jax.lax.dot_general(
         q, e, dimension_numbers=(((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
-    ) + bias  # [1, dp]
+    )  # [1, dp]
+    if quantized:
+        s = s * scale_ref[...].astype(jnp.float32)  # per-slot dequant scale
+    s = s + bias
     s = jnp.where(dead_route, NEG_INF, s)  # whole tile dead if route < 0
 
     # Candidate positions j*depth + slot; sublane-padded slots (always
@@ -72,38 +89,55 @@ def rerank_topk_pallas(
     live: jnp.ndarray,
     routes: jnp.ndarray,
     k: int,
+    scales: jnp.ndarray | None = None,
 ):
     """See ``ref.rerank_topk_ref``."""
     Q, d = q.shape
     C, depth, _ = embs.shape
     P = routes.shape[1]
-    dp = round_up(max(depth, 1), SUBLANE_F32)
+    quantized = embs.dtype == jnp.int8
+    assert (scales is not None) == quantized, \
+        "int8 ring buffers require per-slot scales (and fp32 forbids them)"
+    sublane = SUBLANE_I8 if quantized else SUBLANE_F32
+    dp = round_up(max(depth, 1), sublane)
 
     # Liveness as an additive bias row; the store itself is only copied
-    # when an odd depth forces a sublane pad (depth % 8, rare).
+    # when the depth misses the sublane multiple and forces a pad. int8
+    # rings stay int8 end-to-end — fp32/bf16 rings are cast to f32 once.
     routes_i = routes.astype(jnp.int32)
-    embs_p = embs.astype(jnp.float32)
+    embs_p = embs if quantized else embs.astype(jnp.float32)
     bias = jnp.where(live, 0.0, NEG_INF).astype(jnp.float32)
+    scales_p = scales.astype(jnp.float32) if quantized else None
     if dp != depth:
-        embs_p = pad_dim(embs_p, 1, SUBLANE_F32)
-        bias = pad_dim(bias, 1, SUBLANE_F32, value=NEG_INF)
+        embs_p = pad_dim(embs_p, 1, sublane, value=0)
+        bias = pad_dim(bias, 1, sublane, value=NEG_INF)
+        if quantized:
+            scales_p = pad_dim(scales_p, 1, sublane)
+
+    in_specs = [
+        pl.BlockSpec((1, d), lambda i, j, r: (i, 0)),
+        pl.BlockSpec((1, dp, d),
+                     lambda i, j, r: (jnp.maximum(r[i, j], 0), 0, 0)),
+        pl.BlockSpec((1, dp),
+                     lambda i, j, r: (jnp.maximum(r[i, j], 0), 0)),
+    ]
+    operands = [q, embs_p, bias]
+    if quantized:  # the scale row rides the same route-indexed DMA
+        in_specs.append(pl.BlockSpec(
+            (1, dp), lambda i, j, r: (jnp.maximum(r[i, j], 0), 0)))
+        operands.append(scales_p)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(Q, P),
-        in_specs=[
-            pl.BlockSpec((1, d), lambda i, j, r: (i, 0)),
-            pl.BlockSpec((1, dp, d),
-                         lambda i, j, r: (jnp.maximum(r[i, j], 0), 0, 0)),
-            pl.BlockSpec((1, dp),
-                         lambda i, j, r: (jnp.maximum(r[i, j], 0), 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, k), lambda i, j, r: (i, j)),
             pl.BlockSpec((1, k), lambda i, j, r: (i, j)),
         ],
     )
-    kernel = functools.partial(_rerank_kernel, depth=depth, dp=dp, k=k)
+    kernel = functools.partial(_rerank_kernel, depth=depth, dp=dp, k=k,
+                               quantized=quantized)
     sc, ids = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -112,7 +146,7 @@ def rerank_topk_pallas(
             jax.ShapeDtypeStruct((Q, P * k), jnp.int32),
         ],
         interpret=interpret_mode(),
-    )(routes_i, q, embs_p, bias)
+    )(routes_i, *operands)
 
     # Phase 2: merge the P*k tile winners per query (tiny).
     top_sc, posn = jax.lax.top_k(sc, k)

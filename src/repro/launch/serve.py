@@ -42,6 +42,11 @@ def main():
                     help="routed two-stage retrieval (needs a doc store)")
     ap.add_argument("--nprobe", type=int, default=8)
     ap.add_argument("--store-depth", type=int, default=8)
+    ap.add_argument("--store-dtype", choices=("fp32", "int8"),
+                    default="fp32",
+                    help="ring-buffer embedding precision; int8 holds ~4x "
+                         "the docs per store byte (fp32-accumulating "
+                         "dequant rerank)")
     ap.add_argument("--mesh", default="",
                     help="'D,M' sharded engine: D data shards, M store "
                          "shards (default: single device)")
@@ -77,7 +82,8 @@ def main():
         k = -(-k // m) * m
     cfg = paper_pipeline_config(
         dim=args.dim, k=k, capacity=100, update_interval=256, alpha=0.1,
-        store_depth=args.store_depth if args.two_stage else 0)
+        store_depth=args.store_depth if args.two_stage else 0,
+        store_dtype=args.store_dtype)
     scfg = ServerConfig(max_batch=args.qps, topk=args.topk,
                         two_stage=args.two_stage, nprobe=args.nprobe)
 

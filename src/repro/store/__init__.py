@@ -4,17 +4,26 @@
 (embeddings + ids + arrival stamps) as one flat jit-friendly pytree.
 Stage 2 of routed retrieval reranks these exactly
 (``repro.kernels.rerank``) after the prototype index routes each query to
-its top-``nprobe`` clusters.
+its top-``nprobe`` clusters. Ring embeddings store either fp32 or
+admission-quantized int8 rows with per-slot fp32 scales
+(``StoreConfig.store_dtype``).
+
+``quant`` — the shared symmetric int8 quantization convention used by the
+store and by ``distributed.compression``.
 """
-from repro.store.docstore import (DocStore, StoreConfig, add_batch, init,
-                                  live_mask, memory_bytes, size)
+from repro.store import quant  # noqa: F401
+from repro.store.docstore import (DocStore, StoreConfig, add_batch,
+                                  dequantize, init, live_mask, memory_bytes,
+                                  size)
 
 __all__ = [
     "DocStore",
     "StoreConfig",
     "add_batch",
+    "dequantize",
     "init",
     "live_mask",
     "memory_bytes",
+    "quant",
     "size",
 ]

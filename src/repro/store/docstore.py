@@ -8,6 +8,20 @@ embedding, external doc id, and arrival stamp — as one flat
 ``lax.scan``-able inside the ingest loop, checkpointable, and accounted
 in ``pipeline.state_memory_bytes`` like every other state component.
 
+Storage precision is a config dimension (``StoreConfig.store_dtype``):
+
+  * ``"fp32"`` — embeddings stored as float32 (the original layout).
+  * ``"int8"`` — embeddings quantized on admission (``store.quant``'s
+    shared symmetric convention) to ``[k, depth, d]`` int8 rows with one
+    fp32 dequantization scale per ring slot. At equal bytes int8 rings
+    hold ~4x more recent documents per cluster; the rerank kernel
+    dequantizes routed tiles in VMEM with fp32 accumulation, so no fp32
+    candidate tensor is ever materialized in HBM.
+
+Every store carries a ``scales [k, depth] f32`` leaf (all-ones writes for
+fp32 stores) so the pytree structure — and with it shard specs, merges,
+delta scatters, and checkpoints — is identical across dtypes.
+
 Admission is governed upstream: only documents that pass the pre-filter
 AND whose cluster currently survives the heavy-hitter counter are written
 (see ``pipeline.ingest_batch``), so the store stays focused on the
@@ -16,6 +30,9 @@ clusters the router can actually reach.
 ``add_batch`` is a vectorized ring scatter with *sequential semantics*:
 the final state equals writing the batch one document at a time, which
 keeps ``ingest_stream`` (lax.scan) bit-identical to the per-batch loop.
+Because quantization happens per document at admission, merges and delta
+publications of quantized stores are pure gathers of int8 rows + scales —
+bit-identical across shards by construction.
 """
 from __future__ import annotations
 
@@ -26,6 +43,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import l2_normalize
+from repro.store import quant
+
+STORE_DTYPES = ("fp32", "int8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,25 +54,42 @@ class StoreConfig:
     depth: int = 8          # ring slots per cluster (0 disables the store)
     dim: int = 384
     normalize: bool = True  # store unit vectors -> cosine rerank
+    store_dtype: str = "fp32"   # "fp32" | "int8" ring embedding precision
+
+    def __post_init__(self):
+        assert self.store_dtype in STORE_DTYPES, self.store_dtype
+
+    @property
+    def emb_dtype(self):
+        return jnp.int8 if self.store_dtype == "int8" else jnp.float32
+
+    @property
+    def emb_itemsize(self) -> int:
+        return 1 if self.store_dtype == "int8" else 4
 
 
 class DocStore(NamedTuple):
-    embs: jnp.ndarray    # [k, depth, d] f32 (unit vectors if normalize)
+    embs: jnp.ndarray    # [k, depth, d] f32 or i8 (unit vectors pre-quant
+    #                      if normalize)
     ids: jnp.ndarray     # [k, depth] i32 external doc id (-1 = empty slot)
     # [k, depth] i32 arrival index at admission — provenance for freshness
     # diagnostics and recency-aware rerank/eviction policies; not read on
     # the retrieval hot path.
     stamps: jnp.ndarray
     ptr: jnp.ndarray     # [k] i32 monotone write counter (slot = ptr % depth)
+    # [k, depth] f32 per-slot dequantization scale (int8 stores; all-ones
+    # writes for fp32 so the pytree structure is dtype-invariant)
+    scales: jnp.ndarray
 
 
 def init(cfg: StoreConfig) -> DocStore:
     k, depth = cfg.num_clusters, cfg.depth
     return DocStore(
-        embs=jnp.zeros((k, depth, cfg.dim), jnp.float32),
+        embs=jnp.zeros((k, depth, cfg.dim), cfg.emb_dtype),
         ids=jnp.full((k, depth), -1, jnp.int32),
         stamps=jnp.full((k, depth), -1, jnp.int32),
         ptr=jnp.zeros((k,), jnp.int32),
+        scales=jnp.zeros((k, depth), jnp.float32),
     )
 
 
@@ -71,11 +108,18 @@ def add_batch(
     ``depth`` survive — exactly what a sequential per-arrival write would
     leave behind (and it keeps the scatter free of duplicate indices,
     whose write order jnp leaves unspecified).
+
+    int8 stores quantize on admission: each written row carries its own
+    fp32 scale, so later merges/gathers never re-quantize.
     """
     if cfg.depth == 0:
         return store
     k, depth = cfg.num_clusters, cfg.depth
     v = l2_normalize(x) if cfg.normalize else x.astype(jnp.float32)
+    if cfg.store_dtype == "int8":
+        v, vscale = quant.quantize_int8(v, axis=-1)    # [B, d] i8, [B] f32
+    else:
+        vscale = jnp.ones((x.shape[0],), jnp.float32)
 
     lbl = jnp.where(admit, labels, k).astype(jnp.int32)   # k = drop bucket
     onehot = (lbl[:, None] == jnp.arange(k, dtype=jnp.int32)[None, :])
@@ -95,6 +139,7 @@ def add_batch(
         stamps=store.stamps.at[row, slot].set(stamps.astype(jnp.int32),
                                               mode="drop"),
         ptr=store.ptr + per_cluster,
+        scales=store.scales.at[row, slot].set(vscale, mode="drop"),
     )
 
 
@@ -113,6 +158,10 @@ def merge_stacked(cfg: StoreConfig, stores: DocStore) -> DocStore:
     the globally-newest ``depth`` docs of a cluster is necessarily among
     its own shard's newest ``depth``.
 
+    Quantized stores merge bit-exactly: embeddings were quantized once at
+    admission, so the merge is a pure gather of int8 rows and their
+    per-slot scales — never a re-quantization.
+
     Used by ``engine.sharded`` reconciliation (inside shard_map, after an
     all_gather of the shard stores) and by the host-side oracle in tests.
 
@@ -130,14 +179,17 @@ def merge_stacked(cfg: StoreConfig, stores: DocStore) -> DocStore:
     # [k, S*depth] entry tables, shard-major (tie-break order)
     ids = stores.ids.transpose(1, 0, 2).reshape(k, flat)
     stamps = stores.stamps.transpose(1, 0, 2).reshape(k, flat)
+    scales = stores.scales.transpose(1, 0, 2).reshape(k, flat)
     embs = stores.embs.transpose(1, 0, 2, 3).reshape(k, flat, d)
 
     key = jnp.where(ids >= 0, stamps, jnp.int32(-(2**31)))  # dead sort first
     order = jnp.argsort(key, axis=1)[:, -depth:]   # newest `depth`, stable
     sel_ids = jnp.take_along_axis(ids, order, axis=1)
     sel_stamps = jnp.take_along_axis(stamps, order, axis=1)
+    sel_scales = jnp.take_along_axis(scales, order, axis=1)
     sel_embs = jnp.take_along_axis(embs, order[..., None], axis=1)
     live = sel_ids >= 0
+    zero = jnp.zeros((), sel_embs.dtype)  # dtype-preserving dead fill
 
     # ring placement: window position i -> slot (ptr - depth + i) % depth,
     # gathered as out[:, s] = window[:, (s - ptr) % depth]
@@ -146,10 +198,12 @@ def merge_stacked(cfg: StoreConfig, stores: DocStore) -> DocStore:
     i = (s_idx - ptr[:, None]) % depth
     return DocStore(
         embs=jnp.take_along_axis(
-            jnp.where(live[..., None], sel_embs, 0.0), i[..., None], axis=1),
+            jnp.where(live[..., None], sel_embs, zero), i[..., None], axis=1),
         ids=jnp.take_along_axis(jnp.where(live, sel_ids, -1), i, axis=1),
         stamps=jnp.take_along_axis(jnp.where(live, sel_stamps, -1), i, axis=1),
         ptr=ptr,
+        scales=jnp.take_along_axis(jnp.where(live, sel_scales, 0.0), i,
+                                   axis=1),
     )
 
 
@@ -158,12 +212,8 @@ def scatter_rows(store: DocStore, rows: DocStore, idx: jnp.ndarray) -> DocStore:
     clusters named by ``idx``) into ``store``. Out-of-range idx entries are
     dropped — delta reconciliation uses this both for bucket padding and
     for dirty clusters owned by another store shard."""
-    return DocStore(
-        embs=store.embs.at[idx].set(rows.embs, mode="drop"),
-        ids=store.ids.at[idx].set(rows.ids, mode="drop"),
-        stamps=store.stamps.at[idx].set(rows.stamps, mode="drop"),
-        ptr=store.ptr.at[idx].set(rows.ptr, mode="drop"),
-    )
+    return jax.tree.map(lambda a, r: a.at[idx].set(r, mode="drop"),
+                        store, rows)
 
 
 def shard_slice(cfg: StoreConfig, store: DocStore, shard: jnp.ndarray,
@@ -178,8 +228,17 @@ def shard_slice(cfg: StoreConfig, store: DocStore, shard: jnp.ndarray,
     def slc(a):
         return jax.lax.dynamic_slice_in_dim(a, start, kl, axis=0)
 
-    return DocStore(embs=slc(store.embs), ids=slc(store.ids),
-                    stamps=slc(store.stamps), ptr=slc(store.ptr))
+    return jax.tree.map(slc, store)
+
+
+def dequantize(cfg: StoreConfig, store: DocStore) -> jnp.ndarray:
+    """[k, depth, d] f32 embeddings — identity for fp32 stores, per-slot
+    ``q * scale`` reconstruction for int8 stores. Diagnostic/oracle path:
+    the rerank kernel dequantizes routed tiles in VMEM instead of calling
+    this (which would materialize the fp32 tensor in HBM)."""
+    if cfg.store_dtype == "int8":
+        return quant.dequantize_int8(store.embs, store.scales[..., None])
+    return store.embs
 
 
 def live_mask(store: DocStore) -> jnp.ndarray:
@@ -192,6 +251,9 @@ def size(store: DocStore) -> jnp.ndarray:
 
 
 def memory_bytes(cfg: StoreConfig) -> int:
-    """Resident bytes of the store state (memory-budget accounting)."""
+    """Resident bytes of the store state (memory-budget accounting),
+    dtype-aware: int8 rings cost ``dim`` bytes per slot instead of
+    ``4*dim``, plus the same 12-byte slot overhead (id, stamp, scale)."""
     k, depth = cfg.num_clusters, cfg.depth
-    return k * depth * (cfg.dim * 4 + 4 + 4) + k * 4
+    per_slot = cfg.dim * cfg.emb_itemsize + 4 + 4 + 4  # emb + id/stamp/scale
+    return k * depth * per_slot + k * 4

@@ -1,0 +1,59 @@
+"""Shared symmetric int8 quantization — ONE rounding/scale convention.
+
+Every int8 surface in the system routes through these two functions: the
+quantized document store (``store.docstore`` with
+``StoreConfig.store_dtype="int8"``, per-slot scales over the embedding
+axis) and the compressed gradient/merge collectives
+(``distributed.compression``, per-tensor scales). Keeping the convention
+in one place is what makes cross-layer invariants checkable: a ring entry
+quantized at admission on one shard is bit-identical to the same document
+quantized anywhere else, so shard merges and delta publications of
+quantized leaves are pure gathers (no re-quantization, no drift).
+
+Convention: symmetric, zero-point-free.
+
+    scale = max(|x|) / 127     (clamped to >= 1e-12 / 127 so all-zero
+                                inputs quantize to zeros with a tiny
+                                harmless scale instead of dividing by 0)
+    q     = clip(round(x / scale), -127, 127)  as int8
+    x̂     = q * scale
+
+``round`` is jnp.round (round-half-to-even), so |x - x̂| <= scale / 2
+elementwise — the bound the round-trip test pins.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Quantized magnitudes live in [-127, 127]; -128 is never produced, which
+# keeps symmetric negation exact and matches the compression path.
+QMAX = 127.0
+
+
+def int8_scale(x: jnp.ndarray, axis=None) -> jnp.ndarray:
+    """The shared scale rule: max-abs over ``axis`` (None = whole tensor),
+    divided by 127, clamped away from zero."""
+    x32 = x.astype(jnp.float32)
+    return jnp.maximum(jnp.max(jnp.abs(x32), axis=axis), 1e-12) / QMAX
+
+
+def quantize_int8(x: jnp.ndarray, axis=None):
+    """Symmetric int8 quantization: returns ``(q int8, scale f32)``.
+
+    ``axis=None`` — one scale for the whole tensor (the compression
+    collectives' per-tensor payload). ``axis=-1`` (or any axis tuple) —
+    one scale per remaining index, e.g. per-document scales for ``[B, d]``
+    embedding rows (the store's quantize-on-admit path): q ``[B, d]`` i8,
+    scale ``[B]`` f32.
+    """
+    x32 = x.astype(jnp.float32)
+    scale = int8_scale(x32, axis=axis)
+    s = scale if axis is None else jnp.expand_dims(scale, axis)
+    q = jnp.clip(jnp.round(x32 / s), -QMAX, QMAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """fp32 reconstruction ``q * scale``; ``scale`` must broadcast against
+    ``q`` (callers expand per-row scales, e.g. ``scale[..., None]``)."""
+    return q.astype(jnp.float32) * scale
