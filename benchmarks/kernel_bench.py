@@ -1,0 +1,133 @@
+"""Per-kernel microbenchmark harness: prefilter / assign / admit / rerank.
+
+Reports per-call wall-clock (median of interleaved rounds) and docs- or
+queries-per-second for both the dispatching paths of each kernel — the
+pure-jnp reference (``ref``, the CPU serving path) and the Pallas kernel
+(``pallas``, compiled on TPU; interpret mode elsewhere) — so kernel PRs
+can quote before/after numbers without running the full paper tables:
+
+    PYTHONPATH=src python -m benchmarks.kernel_bench                # all
+    PYTHONPATH=src python -m benchmarks.kernel_bench --kernel admit
+    PYTHONPATH=src python -m benchmarks.kernel_bench --B 512 --K 1000
+
+Shapes default to the paper configuration (microbatch 50, dim 384,
+k=100 clusters, n=5 basis vectors, ring depth 16, nprobe 8). Output is
+one CSV row per (kernel, path): ``kernel,path,us_per_call,items_per_s``.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import numpy as np
+
+
+def _bench(fn, *, reps: int, rounds: int) -> float:
+    """Median-of-rounds per-call seconds (first call compiles, excluded)."""
+    import jax
+
+    jax.block_until_ready(fn())
+    times = []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        out = None
+        for _ in range(reps):
+            out = fn()
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) / reps)
+    return float(np.median(times))
+
+
+def _cases(args):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.admit.admit import admit_pallas
+    from repro.kernels.admit.ref import admit_ref
+    from repro.kernels.assign.assign import assign_pallas
+    from repro.kernels.assign.ref import assign_ref
+    from repro.kernels.prefilter.prefilter import prefilter_scores_pallas
+    from repro.kernels.prefilter.ref import prefilter_scores_ref
+    from repro.kernels.rerank.ref import rerank_topk_ref
+    from repro.kernels.rerank.rerank import rerank_topk_pallas
+
+    rng = np.random.default_rng(args.seed)
+    B, d, K, n = args.B, args.d, args.K, args.n
+    x = jnp.asarray(rng.normal(size=(B, d)), jnp.float32)
+    basis = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    cent = jnp.asarray(rng.normal(size=(K, d)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(args.Q, d)), jnp.float32)
+    embs = jnp.asarray(rng.normal(size=(K, args.depth, d)), jnp.float32)
+    live = jnp.asarray(rng.random((K, args.depth)) < 0.9)
+    routes = jnp.asarray(rng.integers(0, K, (args.Q, args.nprobe)),
+                         jnp.int32)
+
+    pre_ref = jax.jit(prefilter_scores_ref)
+    asn_ref = jax.jit(assign_ref)
+    adm_ref = jax.jit(functools.partial(admit_ref, alpha=args.alpha,
+                                        store_dtype=args.store_dtype))
+    rr_ref = jax.jit(functools.partial(rerank_topk_ref, k=args.topk))
+
+    return {
+        "prefilter": (B, {
+            "ref": lambda: pre_ref(x, basis),
+            "pallas": lambda: prefilter_scores_pallas(x, basis)}),
+        "assign": (B, {
+            "ref": lambda: asn_ref(x, cent),
+            "pallas": lambda: assign_pallas(x, cent)}),
+        "admit": (B, {
+            "ref": lambda: adm_ref(x, basis, cent),
+            "pallas": lambda: admit_pallas(
+                x, basis, cent, args.alpha,
+                store_dtype=args.store_dtype)}),
+        "rerank": (args.Q, {
+            "ref": lambda: rr_ref(q, embs, live, routes),
+            "pallas": lambda: rerank_topk_pallas(q, embs, live, routes,
+                                                 args.topk)}),
+    }
+
+
+def run(args) -> list[dict]:
+    rows = []
+    cases = _cases(args)
+    names = args.kernel or list(cases)
+    for name in names:
+        items, paths = cases[name]
+        for path, fn in paths.items():
+            sec = _bench(fn, reps=args.reps, rounds=args.rounds)
+            rows.append({"kernel": name, "path": path,
+                         "us_per_call": round(1e6 * sec, 1),
+                         "items_per_s": round(items / sec, 1)})
+    return rows
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--kernel", action="append",
+                   choices=["prefilter", "assign", "admit", "rerank"],
+                   help="kernel(s) to bench; default all")
+    p.add_argument("--B", type=int, default=50, help="microbatch (paper: 50)")
+    p.add_argument("--d", type=int, default=384)
+    p.add_argument("--K", type=int, default=100, help="clusters")
+    p.add_argument("--n", type=int, default=5, help="basis vectors")
+    p.add_argument("--Q", type=int, default=16, help="rerank queries")
+    p.add_argument("--depth", type=int, default=16, help="ring depth")
+    p.add_argument("--nprobe", type=int, default=8)
+    p.add_argument("--topk", type=int, default=10)
+    p.add_argument("--alpha", type=float, default=0.1)
+    p.add_argument("--store-dtype", choices=["fp32", "int8"],
+                   default="int8")
+    p.add_argument("--reps", type=int, default=100)
+    p.add_argument("--rounds", type=int, default=7)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args()
+
+    print("kernel,path,us_per_call,items_per_s")
+    for r in run(args):
+        print(f"{r['kernel']},{r['path']},{r['us_per_call']},"
+              f"{r['items_per_s']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,7 +24,8 @@ def _tables():
                             table10_11_pca_sensitivity,
                             table12_component_ablation, table13_downstream,
                             table14_two_stage, table15_sharded,
-                            table16_async_serving, table17_quantized_store)
+                            table16_async_serving, table17_quantized_store,
+                            table18_ingest_throughput)
     scale = 0.5 if FAST else 1.0
 
     def n(x):
@@ -45,6 +46,7 @@ def _tables():
         ("table15", lambda: table15_sharded.run(n_batches=n(24))),
         ("table16", lambda: table16_async_serving.run(n_batches=n(24))),
         ("table17", lambda: table17_quantized_store.run(n_batches=n(24))),
+        ("table18", lambda: table18_ingest_throughput.run(n_batches=n(24))),
         ("fig3", lambda: fig3_hyperparams.run(n_batches=n(20))),
     ]
 

@@ -125,10 +125,11 @@ def ingest_batch(cfg: PipelineConfig, state: PipelineState,
     """Process one microbatch of embeddings [B, d] with external ids [B] i32.
 
     Returns (new_state, info dict of per-batch diagnostics). The
-    implementation lives in ``repro.engine`` as a composition of the seven
-    engine stages (screen, assign+update, count, store-write,
-    upsert-snapshot, route, rerank) shared with the ``shard_map``
-    multi-device path; this wrapper only adds jit + buffer donation.
+    implementation lives in ``repro.engine`` as a composition of the
+    engine stages (fused admit — screen + assign + quantize-on-admit in
+    one device program — then count, store-write, upsert-snapshot, route,
+    rerank) shared with the ``shard_map`` multi-device path; this wrapper
+    only adds jit + buffer donation.
     """
     from repro.engine.engine import ingest_impl
 

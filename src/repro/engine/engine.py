@@ -59,8 +59,11 @@ def ingest_impl(cfg: "pipeline.PipelineConfig", state: "pipeline.PipelineState",
 
     live = doc_ids >= 0
     n_live = jnp.sum(live.astype(jnp.int32))
-    pre, r, keep = stages.screen(cfg.pre, state.pre, x, live)
-    clus, labels, sims = stages.assign_update(cfg.clus, state.clus, x, keep)
+    # fused admission: screen + assign + quantize-on-admit in ONE device
+    # program (stages.admit -> kernels.admit); the store rows arrive at
+    # the ring write below already in the store dtype
+    pre, r, keep, clus, labels, sims, v, vscale = stages.admit(
+        cfg.pre, cfg.clus, cfg.store, state.pre, state.clus, x, live)
     hh, masked_labels, hh_info = stages.count(cfg.hh, state.hh, labels, keep,
                                               k_hh)
     rep_ids, rep_sims = stages.update_representatives(
@@ -70,7 +73,7 @@ def ingest_impl(cfg: "pipeline.PipelineConfig", state: "pipeline.PipelineState",
     # arrival index among live rows (== arange(B) for an unpadded batch)
     stamps = state.arrivals + jnp.cumsum(live.astype(jnp.int32)) - 1
     store = stages.store_write(cfg.store, state.store, x, labels, stored,
-                               doc_ids, stamps)
+                               doc_ids, stamps, v=v, vscale=vscale)
 
     since = state.since_upsert + n_live
     refresh = since >= cfg.update_interval

@@ -12,10 +12,15 @@ particular used to be forked between ``pipeline.do_upsert`` and
 
 Stage map (ingest):
 
-    screen ──► assign_update ──► count ──► update_representatives
-                                   │
-                                   ├──► store_write   (admitted docs)
-                                   └──► upsert_snapshot (every T arrivals)
+    admit (fused screen + assign + quantize-on-admit, one device program)
+      │        ──► count ──► update_representatives
+      │                        │
+      │                        ├──► store_write   (admitted docs, rows
+      │                        │                   pre-quantized by admit)
+      │                        └──► upsert_snapshot (every T arrivals)
+      └── staged reference: screen ──► assign_update (+ store-side
+          quantize), the decomposition ``admit`` runs with
+          use_pallas=False — bit-identical keep/labels/rows/scales
 
 Stage map (two-stage query):
 
@@ -28,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import clustering, heavy_hitter, index as index_lib, prefilter
+from repro.kernels.admit.ops import admit as admit_op
 from repro.kernels.common import NEG_INF, l2_normalize
 from repro.kernels.rerank.ops import rerank_topk
 from repro.store import docstore
@@ -41,6 +47,10 @@ def screen(pre_cfg: prefilter.PrefilterConfig, pre_state, x: jnp.ndarray,
     ``live`` ([B] bool, optional) marks real rows; dead rows (ragged-batch
     padding, doc_id < 0) are kept out of the PCA window and forced to
     keep=False so every downstream stage treats them as inert.
+
+    Staged reference form of the admission decision — the ingest hot path
+    composes over the fused ``admit`` stage instead, which produces
+    bit-identical keep masks.
     """
     pre = prefilter.ingest(pre_cfg, pre_state, x, mask=live)
     r, keep = prefilter.score(pre_cfg, pre, x)
@@ -51,10 +61,44 @@ def screen(pre_cfg: prefilter.PrefilterConfig, pre_state, x: jnp.ndarray,
 
 def assign_update(clus_cfg: clustering.ClusterConfig, clus_state,
                   x: jnp.ndarray, keep: jnp.ndarray):
-    """(3) cluster assignment + centroid update (only retained items)."""
+    """(3) cluster assignment + centroid update (only retained items).
+
+    Staged reference form — the ingest hot path gets labels/sims from the
+    fused ``admit`` stage and applies the same ``clustering.update``."""
     labels, sims = clustering.assign(clus_cfg, clus_state, x)
     clus = clustering.update(clus_cfg, clus_state, x, labels, keep)
     return clus, labels, sims
+
+
+def admit(pre_cfg: prefilter.PrefilterConfig,
+          clus_cfg: clustering.ClusterConfig,
+          store_cfg: docstore.StoreConfig,
+          pre_state, clus_state, x: jnp.ndarray,
+          live: jnp.ndarray | None = None):
+    """(1)+(2)+(3) fused: window ingest, then ONE admission device program
+    (``kernels.admit``) that streams x once and emits the prefilter score,
+    the keep mask (threshold + live mask fused in), the cluster label +
+    similarity, and the ring-write-ready store row — already quantized for
+    int8 stores — followed by the same centroid update as the staged path.
+
+    This is the one implementation of admission semantics: the
+    single-device engine, the shard_map ingest and ``pipeline.ingest_batch``
+    all compose over it. With ``use_pallas=False`` (the CPU default) it
+    dispatches to the staged prefilter -> assign -> quantize reference
+    composition, so screen/assign_update stay the pinned oracle.
+
+    Returns (pre, r, keep, clus, labels, sims, v, vscale); v/vscale are
+    None when the store is disabled (depth 0).
+    """
+    pre = prefilter.ingest(pre_cfg, pre_state, x, mask=live)
+    use_pallas = (clus_cfg.use_pallas if clus_cfg.use_pallas is not None
+                  else pre_cfg.use_pallas)
+    r, keep, labels, sims, v, vscale = admit_op(
+        x, pre.basis, clus_state.centroids, pre_cfg.alpha, live,
+        store_dtype=store_cfg.store_dtype, normalize=store_cfg.normalize,
+        emit_rows=store_cfg.depth > 0, use_pallas=use_pallas)
+    clus = clustering.update(clus_cfg, clus_state, x, labels, keep)
+    return pre, r, keep, clus, labels, sims, v, vscale
 
 
 def count(hh_cfg: heavy_hitter.HHConfig, hh_state, labels: jnp.ndarray,
@@ -86,11 +130,16 @@ def update_representatives(rep_ids, rep_sims, labels, sims, doc_ids, keep,
 
 
 def store_write(store_cfg: docstore.StoreConfig, store, x, labels, stored,
-                doc_ids, stamps):
+                doc_ids, stamps, v=None, vscale=None):
     """Tiered document store: ring-write docs that survived BOTH filters
-    (pre-filter relevance + a heavy-hitter-tracked cluster at arrival)."""
+    (pre-filter relevance + a heavy-hitter-tracked cluster at arrival).
+
+    ``v``/``vscale`` are the ring-write-ready rows the fused ``admit``
+    stage emits (already normalized, already quantized for int8 stores);
+    without them the store normalizes/quantizes ``x`` itself — identical
+    results either way."""
     return docstore.add_batch(store_cfg, store, x, labels, stored, doc_ids,
-                              stamps)
+                              stamps, v=v, vscale=vscale)
 
 
 def upsert_snapshot(index_cfg: index_lib.IndexConfig, index, hh_state,

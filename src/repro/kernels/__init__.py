@@ -6,12 +6,15 @@ Each kernel package has:
   ref.py    — pure-jnp oracle used by the allclose test sweeps
 
 Kernels:
+  admit     — fused ingest admission: screen + assign + quantize-on-admit
+              in one HBM pass (paper Algorithm 1, stages 1-3)
   prefilter — fused multi-vector cosine screening (paper stage 1)
   assign    — fused nearest-centroid assignment (paper stage 2)
   mips      — fused MIPS score + per-block top-k retrieval (paper stage 4)
   rerank    — routed gather + fused cosine rerank top-k (two-stage stage 2)
   bag       — TBE-style EmbeddingBag gather+segment-reduce (recsys substrate)
 """
+from repro.kernels.admit.ops import admit
 from repro.kernels.assign.ops import assign
 from repro.kernels.bag.ops import embedding_bag
 from repro.kernels.mips.ops import mips_topk
@@ -19,6 +22,7 @@ from repro.kernels.prefilter.ops import prefilter, prefilter_scores
 from repro.kernels.rerank.ops import rerank_topk
 
 __all__ = [
+    "admit",
     "assign",
     "embedding_bag",
     "mips_topk",

@@ -1,0 +1,195 @@
+"""Pallas TPU kernel: fused ingest admission — one HBM pass per microbatch.
+
+Algorithm-1 admission used to run as three separate device programs —
+``kernels/prefilter`` (mean-cosine screen), ``kernels/assign``
+(nearest-centroid) and quantize-on-admit inside ``docstore.add_batch`` —
+each of which re-read the ``[B, d]`` microbatch from HBM and re-normalized
+``x``. This kernel streams ``x`` in ``(bm, d)`` blocks ONCE and emits, per
+row: the prefilter score ``r``, the keep mask (relevance threshold AND the
+ragged-batch live mask, fused in), the nearest-centroid label + cosine, and
+the ring-write-ready store row — symmetric-quantized int8 + per-row fp32
+scale (``store.quant``'s shared convention) when the store is int8 — so
+admitted documents arrive at the ring write already quantized. Neither the
+``[B, n]`` basis-cosine matrix, the ``[B, K]`` centroid-similarity matrix,
+nor an fp32 staging copy of the admitted rows ever materializes in HBM.
+
+Grid: (B // bm, K // bk), centroid blocks as the reduction axis with a
+running (max, argmax) carried in the output VMEM blocks (as in ``assign``).
+The x block is revisited across the k-steps of one row block, so the
+pipeline fetches it from HBM once per row block; the tiny topic basis is
+normalized host-side and VMEM-resident for the whole launch — the same
+hoist the prefilter kernel applies, but pinned to the oracle's exact
+``l2_normalize`` divide sequence (this kernel's contract is bit-parity
+with the staged reference) where prefilter's ``normalize_basis_rows``
+deliberately keeps the legacy in-kernel reciprocal form (its contract is
+bit-parity with the pre-hoist kernel). Everything that depends only on
+the row block — screen, keep, quantize — runs on the first k-step.
+
+Normalization uses the oracle's exact op sequence (``x / max(norm, 1e-12)``
+rather than the rsqrt shortcut): admission is a *decision* kernel, and the
+keep/label/int8-row bit-identity contract with the staged reference path is
+worth one extra VPU divide per element.
+
+VMEM working set per step: bm*d (x block) + bk*d (centroid block) + np*d
+(basis) + bm*bk (similarity tile) fp32 + the bm*d row output (int8 or
+fp32). Defaults (bm=256, bk=512, d<=2048) stay under ~8 MB of the ~16
+MB/core VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import (LANE, NEG_INF, SUBLANE_F32, SUBLANE_I8,
+                                  interpret_mode, l2_normalize, pad_dim,
+                                  round_up)
+from repro.store import quant
+
+
+def _admit_kernel(x_ref, v_ref, c_ref, live_ref,
+                  r_ref, keep_ref, sim_ref, id_ref, *rest,
+                  alpha: float, n_true: int, bk: int, k_total: int,
+                  normalize: bool, quantized: bool, emit_rows: bool):
+    kb = pl.program_id(1)
+
+    x = x_ref[...].astype(jnp.float32)  # [bm, d]
+    # Oracle-exact fp32 row normalization (shared by screen / assign / row
+    # emit): zero rows (ragged padding) normalize to zero, as in the ref.
+    xnorm = jnp.sqrt(jnp.sum(x * x, axis=1, keepdims=True))
+    xn = x / jnp.maximum(xnorm, 1e-12)
+
+    # ---- nearest centroid: running (max, argmax) across centroid blocks
+    c = c_ref[...].astype(jnp.float32)  # [bk, d]
+    cnorm = jnp.sqrt(jnp.sum(c * c, axis=1, keepdims=True))
+    cn = c / jnp.maximum(cnorm, 1e-12)
+    s = jax.lax.dot_general(
+        xn, cn,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [bm, bk]
+    ids = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + kb * bk
+    s = jnp.where(ids < k_total, s, NEG_INF)
+    local_max = jnp.max(s, axis=1)
+    local_arg = jnp.min(
+        jnp.where(s >= local_max[:, None], ids, jnp.int32(2**31 - 1)), axis=1)
+
+    @pl.when(kb == 0)
+    def _first_step():
+        sim_ref[...] = local_max[:, None]
+        id_ref[...] = local_arg[:, None]
+
+        # ---- prefilter screen + fused keep mask (row-block-only work)
+        sp = jax.lax.dot_general(
+            xn, v_ref[...],
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # [bm, np]; the zero basis pads are sliced off pre-reduce so the
+        #    mean reduces over exactly the oracle's n terms
+        r = jnp.sum(sp[:, :n_true], axis=1) / n_true
+        live = live_ref[..., 0] != 0
+        r_ref[...] = r[:, None]
+        keep_ref[...] = ((r >= alpha) & live).astype(jnp.int32)[:, None]
+
+        # ---- quantize-on-admit: the ring-write-ready row. The shared
+        # store.quant convention is pure jnp, so the kernel calls it
+        # directly — one int8 convention across store, collectives, and
+        # this kernel, by construction rather than by copy.
+        if emit_rows:
+            row_ref, scale_ref = rest
+            v = xn if normalize else x
+            if quantized:
+                q, sc = quant.quantize_int8(v, axis=-1)
+                row_ref[...] = q
+                scale_ref[...] = sc[:, None]
+            else:
+                row_ref[...] = v
+                scale_ref[...] = jnp.ones_like(v[:, :1])
+
+    @pl.when(kb > 0)
+    def _merge():
+        prev_sim = sim_ref[..., 0]
+        prev_id = id_ref[..., 0]
+        take_new = local_max > prev_sim
+        sim_ref[...] = jnp.where(take_new, local_max, prev_sim)[:, None]
+        id_ref[...] = jnp.where(take_new, local_arg, prev_id)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "alpha", "store_dtype", "normalize", "emit_rows", "bm", "bk"))
+def admit_pallas(
+    x: jnp.ndarray,
+    basis: jnp.ndarray,
+    centroids: jnp.ndarray,
+    alpha: float,
+    live: jnp.ndarray | None = None,
+    *,
+    store_dtype: str = "fp32",
+    normalize: bool = True,
+    emit_rows: bool = True,
+    bm: int = 256,
+    bk: int = 512,
+):
+    """See ``ref.admit_ref``. Shapes: x [B, d], basis [n, d], centroids
+    [K, d], live [B] bool (None = all live)."""
+    B, d = x.shape
+    n = basis.shape[0]
+    K = centroids.shape[0]
+    quantized = store_dtype == "int8"
+    # int8 row-output blocks must sit on the (32, 128) int8 tile grid
+    # (SUBLANE_I8, as the rerank kernel pads its ring tiles); fp32 blocks
+    # on the (8, 128) grid. Pad rows are zeros and sliced off below.
+    sublane = SUBLANE_I8 if (quantized and emit_rows) else SUBLANE_F32
+    bm = round_up(min(bm, max(8, B)), sublane)
+    bk = min(bk, max(128, K))
+
+    xp = pad_dim(x, 0, bm)  # zero pad rows: sliced off below
+    # host-hoisted basis normalization, the oracle's exact op sequence
+    # (zero rows normalize to zero; zero lane pads contribute 0)
+    vp = pad_dim(l2_normalize(basis), 0, LANE)
+    cp = pad_dim(centroids, 0, bk)  # padded ids masked to -inf in kernel
+    Bp, Kp = xp.shape[0], cp.shape[0]
+    live_i = (jnp.ones((B,), jnp.int32) if live is None
+              else live.astype(jnp.int32))
+    live_p = pad_dim(live_i[:, None], 0, bm)
+
+    out_specs = [pl.BlockSpec((bm, 1), lambda i, k: (i, 0))] * 4
+    out_shape = [
+        jax.ShapeDtypeStruct((Bp, 1), jnp.float32),   # r
+        jax.ShapeDtypeStruct((Bp, 1), jnp.int32),     # keep
+        jax.ShapeDtypeStruct((Bp, 1), jnp.float32),   # best sim
+        jax.ShapeDtypeStruct((Bp, 1), jnp.int32),     # best id
+    ]
+    if emit_rows:
+        out_specs += [pl.BlockSpec((bm, d), lambda i, k: (i, 0)),
+                      pl.BlockSpec((bm, 1), lambda i, k: (i, 0))]
+        out_shape += [
+            jax.ShapeDtypeStruct((Bp, d),
+                                 jnp.int8 if quantized else jnp.float32),
+            jax.ShapeDtypeStruct((Bp, 1), jnp.float32),
+        ]
+
+    kernel = functools.partial(
+        _admit_kernel, alpha=alpha, n_true=n, bk=bk, k_total=K,
+        normalize=normalize, quantized=quantized, emit_rows=emit_rows)
+    out = pl.pallas_call(
+        kernel,
+        grid=(Bp // bm, Kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, k: (i, 0)),
+            pl.BlockSpec((vp.shape[0], d), lambda i, k: (0, 0)),
+            pl.BlockSpec((bk, d), lambda i, k: (k, 0)),
+            pl.BlockSpec((bm, 1), lambda i, k: (i, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret_mode(),
+    )(xp, vp, cp, live_p)
+
+    r, keep, sim, ids = out[:4]
+    result = (r[:B, 0], keep[:B, 0] != 0, ids[:B, 0], sim[:B, 0])
+    if emit_rows:
+        return result + (out[4][:B], out[5][:B, 0])
+    return result + (None, None)

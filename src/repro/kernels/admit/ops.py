@@ -1,0 +1,42 @@
+"""jit'd public wrapper for fused ingest admission."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.admit.ref import admit_ref
+from repro.kernels.common import use_pallas_default
+
+
+def admit(
+    x: jnp.ndarray,
+    basis: jnp.ndarray,
+    centroids: jnp.ndarray,
+    alpha: float,
+    live: jnp.ndarray | None = None,
+    *,
+    store_dtype: str = "fp32",
+    normalize: bool = True,
+    emit_rows: bool = True,
+    use_pallas: bool | None = None,
+):
+    """One fused admission decision per row: returns
+    ``(r [B] f32, keep [B] bool, labels [B] i32, sims [B] f32,
+    v [B, d] f32|i8 | None, vscale [B] f32 | None)``.
+
+    Dispatches to the fused Pallas megakernel on TPU (one HBM pass over x;
+    interpret mode under REPRO_FORCE_PALLAS=1) and to the staged pure-jnp
+    reference — the exact prefilter -> assign -> quantize composition the
+    engine used to run as separate device programs — otherwise. Both paths
+    produce bit-identical keep masks, labels, and int8 rows/scales.
+    """
+    if use_pallas is None:
+        use_pallas = use_pallas_default()
+    if use_pallas:
+        from repro.kernels.admit.admit import admit_pallas
+
+        return admit_pallas(x, basis, centroids, alpha, live,
+                            store_dtype=store_dtype, normalize=normalize,
+                            emit_rows=emit_rows)
+    return admit_ref(x, basis, centroids, alpha, live,
+                     store_dtype=store_dtype, normalize=normalize,
+                     emit_rows=emit_rows)

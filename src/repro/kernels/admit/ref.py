@@ -1,0 +1,67 @@
+"""Pure-jnp oracle for fused ingest admission (paper Algorithm 1, steps 1-3).
+
+This IS the staged reference path: it composes the exact per-stage ops the
+engine used to run as three separate device programs — the mean-cosine
+pre-filter screen (``kernels.prefilter.ref``), nearest-centroid assignment
+(``kernels.assign.ref``), and quantize-on-admit (``store.quant``'s shared
+symmetric convention, as ``docstore.add_batch`` applies it) — so the fused
+kernel's bit-identity contract ("same keep masks, labels, int8 rows and
+scales as the staged path") is pinned against this function.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.assign.ref import assign_ref
+from repro.kernels.common import l2_normalize
+from repro.kernels.prefilter.ref import prefilter_scores_ref
+from repro.store import quant
+
+
+def admit_ref(
+    x: jnp.ndarray,
+    basis: jnp.ndarray,
+    centroids: jnp.ndarray,
+    alpha: float,
+    live: jnp.ndarray | None = None,
+    *,
+    store_dtype: str = "fp32",
+    normalize: bool = True,
+    emit_rows: bool = True,
+):
+    """One admission decision per row of a microbatch.
+
+    Args:
+      x: [B, d] embeddings (any float dtype; all math in fp32).
+      basis: [n, d] topic basis (prefilter screen).
+      centroids: [K, d] cluster centroids.
+      alpha: relevance threshold — keep iff mean cosine >= alpha.
+      live: optional [B] bool; dead rows (ragged-batch padding, doc_id < 0)
+        are forced to keep=False. Their score/label still follow the staged
+        semantics (a zero pad row scores r=0 and labels cluster 0).
+      store_dtype: "fp32" | "int8" — precision of the emitted store rows.
+      normalize: store unit vectors (the store's cosine-rerank layout).
+      emit_rows: emit the ring-write-ready rows; False (store disabled)
+        returns (None, None) for them.
+
+    Returns:
+      r: [B] f32 mean-cosine relevance.
+      keep: [B] bool — (r >= alpha) & live.
+      labels: [B] i32 nearest centroid.
+      sims: [B] f32 cosine to it.
+      v: [B, d] f32 (or i8 for int8 stores) ring-write-ready row, or None.
+      vscale: [B] f32 per-row dequantization scale (ones for fp32), or None.
+    """
+    r = prefilter_scores_ref(x, basis)
+    keep = r >= alpha
+    if live is not None:
+        keep = keep & live
+    labels, sims = assign_ref(x, centroids)
+    if not emit_rows:
+        return r, keep, labels, sims, None, None
+    v = l2_normalize(x) if normalize else x.astype(jnp.float32)
+    if store_dtype == "int8":
+        v, vscale = quant.quantize_int8(v, axis=-1)
+    else:
+        vscale = jnp.ones((x.shape[0],), jnp.float32)
+    return r, keep, labels, sims, v, vscale

@@ -64,3 +64,24 @@ def l2_normalize(x: jnp.ndarray, axis: int = -1, eps: float = 1e-12) -> jnp.ndar
     x32 = x.astype(jnp.float32)
     n = jnp.sqrt(jnp.sum(x32 * x32, axis=axis, keepdims=True))
     return x32 / jnp.maximum(n, eps)
+
+
+def normalize_basis_rows(v: jnp.ndarray) -> jnp.ndarray:
+    """fp32 row normalization with zero rows kept exactly zero.
+
+    The host-side basis normalization the ``prefilter`` kernel keeps
+    VMEM-resident: rows are scaled by ``1/max(norm, 1e-12)`` — the exact
+    op sequence that kernel used to run per grid step before the
+    normalization was hoisted, so the hoist is bit-identical — and
+    all-zero rows map to zero vectors instead of NaNs.
+
+    Deliberately NOT unified with ``l2_normalize`` (direct divide, the
+    oracle sequence): the two differ in the last ulp, and the two basis
+    hoists pin against different references — prefilter against its own
+    pre-hoist kernel (this reciprocal form), the ``admit`` megakernel
+    against the staged oracle (``l2_normalize``, whose bit-parity its
+    keep-mask contract depends on)."""
+    v32 = v.astype(jnp.float32)
+    vnorm = jnp.sqrt(jnp.sum(v32 * v32, axis=1, keepdims=True))
+    vinv = jnp.where(vnorm > 0, 1.0 / jnp.maximum(vnorm, 1e-12), 0.0)
+    return v32 * vinv

@@ -5,6 +5,13 @@ launch; the kernel streams x in (bm, d) blocks and fuses fp32 normalization,
 the [bm, n] MXU matmul, and the mean-reduce, emitting one score per row.
 The [B, n] cosine matrix never exists in HBM.
 
+The basis is normalized ONCE on the host side (``normalize_basis_rows``)
+before the launch — the same basis block used to be re-normalized on every
+grid step, which is pure waste for a broadcast operand that never changes
+across the grid. The hoisted normalization runs the identical op sequence
+(``v * 1/max(norm, 1e-12)``, zero rows pinned to zero), so scores are
+bit-identical to the in-kernel form.
+
 Grid: (B // bm,). n is padded to the 128-lane boundary with zero vectors and
 the mean divides by the true n.
 """
@@ -16,20 +23,19 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import LANE, interpret_mode, pad_dim
+from repro.kernels.common import (LANE, interpret_mode, normalize_basis_rows,
+                                  pad_dim)
 
 
 def _prefilter_kernel(x_ref, v_ref, r_ref, *, n_true: int):
     x = x_ref[...].astype(jnp.float32)  # [bm, d]
-    v = v_ref[...].astype(jnp.float32)  # [np, d] (zero rows beyond n_true)
+    v = v_ref[...]                      # [np, d] pre-normalized (zero pads)
 
     xinv = jax.lax.rsqrt(jnp.maximum(jnp.sum(x * x, axis=1, keepdims=True), 1e-24))
-    vnorm = jnp.sqrt(jnp.sum(v * v, axis=1, keepdims=True))
-    vinv = jnp.where(vnorm > 0, 1.0 / jnp.maximum(vnorm, 1e-12), 0.0)
 
     s = jax.lax.dot_general(
         x * xinv,
-        v * vinv,
+        v,
         dimension_numbers=(((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
     )  # [bm, np]; zero rows contribute 0 to the sum
@@ -44,7 +50,8 @@ def prefilter_scores_pallas(x: jnp.ndarray, basis: jnp.ndarray, *, bm: int = 512
     bm = min(bm, max(8, B))
 
     xp = pad_dim(x, 0, bm)
-    vp = pad_dim(basis, 0, LANE)  # zero rows: excluded from mean via n_true
+    # normalize once on the host; zero pad rows excluded from mean via n_true
+    vp = pad_dim(normalize_basis_rows(basis), 0, LANE)
     Bp = xp.shape[0]
 
     kernel = functools.partial(_prefilter_kernel, n_true=n)

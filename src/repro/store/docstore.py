@@ -96,6 +96,7 @@ def init(cfg: StoreConfig) -> DocStore:
 def add_batch(
     cfg: StoreConfig, store: DocStore, x: jnp.ndarray, labels: jnp.ndarray,
     admit: jnp.ndarray, doc_ids: jnp.ndarray, stamps: jnp.ndarray,
+    v: jnp.ndarray | None = None, vscale: jnp.ndarray | None = None,
 ) -> DocStore:
     """Ring-write the admitted documents of one microbatch.
 
@@ -110,16 +111,24 @@ def add_batch(
     whose write order jnp leaves unspecified).
 
     int8 stores quantize on admission: each written row carries its own
-    fp32 scale, so later merges/gathers never re-quantize.
+    fp32 scale, so later merges/gathers never re-quantize. Callers on the
+    fused-admission path pass the rows pre-quantized (``v`` [B, d] in the
+    store dtype + ``vscale`` [B] f32, as the admit kernel emits them) and
+    the write is a pure scatter; otherwise the rows are normalized and
+    quantized here — same convention, identical results.
     """
     if cfg.depth == 0:
         return store
     k, depth = cfg.num_clusters, cfg.depth
-    v = l2_normalize(x) if cfg.normalize else x.astype(jnp.float32)
-    if cfg.store_dtype == "int8":
-        v, vscale = quant.quantize_int8(v, axis=-1)    # [B, d] i8, [B] f32
+    if v is None:
+        v = l2_normalize(x) if cfg.normalize else x.astype(jnp.float32)
+        if cfg.store_dtype == "int8":
+            v, vscale = quant.quantize_int8(v, axis=-1)  # [B, d] i8, [B] f32
+        else:
+            vscale = jnp.ones((x.shape[0],), jnp.float32)
     else:
-        vscale = jnp.ones((x.shape[0],), jnp.float32)
+        assert vscale is not None, "pre-quantized rows require their scales"
+        assert v.dtype == cfg.emb_dtype, (v.dtype, cfg.emb_dtype)
 
     lbl = jnp.where(admit, labels, k).astype(jnp.int32)   # k = drop bucket
     onehot = (lbl[:, None] == jnp.arange(k, dtype=jnp.int32)[None, :])

@@ -47,6 +47,24 @@ def test_prefilter_matches_ref(B, n, d, dtype):
                                atol=1e-4)
 
 
+def test_prefilter_hoisted_normalization_scale_invariant():
+    """The basis normalization hoisted to the host keeps the kernel's
+    cosine semantics: scaling basis rows by a power of two (exact in fp32)
+    leaves scores bit-identical, and an all-zero basis row contributes
+    exactly zero (the hoisted guard) instead of NaNs."""
+    x, v = _arr((96, 64), jnp.float32), _arr((5, 64), jnp.float32)
+    r1 = prefilter_scores_pallas(x, v)
+    r4 = prefilter_scores_pallas(x, 4.0 * v)
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r4))
+
+    vz = v.at[2].set(0.0)  # degenerate zero row
+    r_p = prefilter_scores_pallas(x, vz)
+    r_r = prefilter_scores_ref(x, vz)
+    assert np.isfinite(np.asarray(r_p)).all()
+    np.testing.assert_allclose(np.asarray(r_p), np.asarray(r_r),
+                               rtol=1e-5, atol=1e-6)
+
+
 @pytest.mark.parametrize("Q,N,d,k", [(4, 300, 32, 10), (1, 2050, 64, 16),
                                      (9, 128, 48, 128), (2, 64, 16, 1)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
