@@ -89,6 +89,8 @@ def _cases(args):
 
 
 def run(args) -> list[dict]:
+    from repro.obs import kern
+
     rows = []
     cases = _cases(args)
     names = args.kernel or list(cases)
@@ -96,9 +98,15 @@ def run(args) -> list[dict]:
         items, paths = cases[name]
         for path, fn in paths.items():
             sec = _bench(fn, reps=args.reps, rounds=args.rounds)
+            # modeled HBM traffic from the compiled HLO (the roofline
+            # substitute for a hardware profiler); lands in the metrics
+            # registry too when observability is enabled
+            cost = kern.profile_kernel(f"{name}_{path}", fn, time_it=False)
             rows.append({"kernel": name, "path": path,
                          "us_per_call": round(1e6 * sec, 1),
-                         "items_per_s": round(items / sec, 1)})
+                         "items_per_s": round(items / sec, 1),
+                         "modeled_hbm_bytes": int(cost["modeled_hbm_bytes"]),
+                         "modeled_flops": int(cost["modeled_flops"])})
     return rows
 
 
@@ -123,10 +131,12 @@ def main() -> None:
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args()
 
-    print("kernel,path,us_per_call,items_per_s")
+    print("kernel,path,us_per_call,items_per_s,modeled_hbm_bytes,"
+          "modeled_flops")
     for r in run(args):
         print(f"{r['kernel']},{r['path']},{r['us_per_call']},"
-              f"{r['items_per_s']}")
+              f"{r['items_per_s']},{r['modeled_hbm_bytes']},"
+              f"{r['modeled_flops']}")
 
 
 if __name__ == "__main__":

@@ -66,7 +66,12 @@ def _headline(row: dict) -> tuple[str, float, float]:
 
 
 def main() -> None:
+    from repro import obs
+
     os.makedirs("benchmarks/results", exist_ok=True)
+    # metrics on for the whole sweep: serving counters/histograms from
+    # every table land in one registry, dumped next to the CSV results
+    obs.enable(metrics=True, trace=False)
     all_rows = []
     print("name,us_per_call,derived")
     for tname, fn in _tables():
@@ -84,6 +89,11 @@ def main() -> None:
             print(f"{name},{us:.1f},{derived}")
         print(f"# {tname} done in {time.time()-t0:.1f}s", flush=True)
     write_csv("benchmarks/results/all.csv", all_rows)
+    reg = obs.metrics()
+    if reg is not None:
+        reg.dump_json("benchmarks/results/metrics.json")
+        print("# metrics snapshot -> benchmarks/results/metrics.json",
+              flush=True)
 
 
 if __name__ == "__main__":

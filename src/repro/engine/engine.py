@@ -15,10 +15,12 @@ device mesh.
 from __future__ import annotations
 
 import functools
+import time
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import index as index_lib, pipeline
 from repro.engine import stages
@@ -32,13 +34,17 @@ class ServingSnapshot(NamedTuple):
     Queries read ONLY published snapshots (atomic reference swap on the
     host), never the live ingest state — the async runtime's "index
     refresh without interrupting queries". ``version`` is a host-side
-    publish sequence number (not a device array; it never enters jit).
+    publish sequence number and ``published_at`` the wall-clock publish
+    timestamp (``time.time()``; 0.0 = never published, e.g. host-oracle
+    snapshots) — both plain host scalars that never enter jit; snapshot
+    age in ``freshness_stats()`` is ``now - published_at``.
     """
 
     index: index_lib.FlatIndex   # replicated across devices
     route_labels: jnp.ndarray    # [bmax] i32 slot -> cluster (-1 dead)
     store: docstore.DocStore     # full, or cluster-sharded over "model"
     version: int = 0
+    published_at: float = 0.0
 
 
 def ingest_impl(cfg: "pipeline.PipelineConfig", state: "pipeline.PipelineState",
@@ -147,6 +153,12 @@ def snapshot_query_impl(cfg: "pipeline.PipelineConfig", index, route_labels,
     return stages.decode_rerank(store.ids, routes, scores, pos, depth, nprobe)
 
 
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _pipeline_counters_jit(cfg: "pipeline.PipelineConfig",
+                           state: "pipeline.PipelineState"):
+    return stages.pipeline_counters(cfg, state)
+
+
 class Engine:
     """Single-device streaming engine: (cfg, PipelineState) behind the
     serving protocol. ``ShardedEngine`` implements the same protocol over
@@ -186,6 +198,7 @@ class Engine:
             route_labels=jnp.copy(st.route_labels),
             store=jax.tree.map(jnp.copy, st.store),
             version=self._version,
+            published_at=time.time(),
         )
 
     def query_snapshot(self, snap: ServingSnapshot, q: jnp.ndarray,
@@ -199,6 +212,14 @@ class Engine:
 
     def index_size(self) -> int:
         return int(index_lib.size(self.state.index))
+
+    def device_counters(self) -> dict:
+        """Fetch the in-graph pipeline counters as ONE small host
+        transfer (a [1, N] i32 vector). Called by the serving runtime at
+        publish time only — never on the query or per-batch ingest path —
+        so metrics-enabled serving adds zero device syncs to queries."""
+        vec = np.asarray(_pipeline_counters_jit(self.cfg, self.state))
+        return stages.decode_pipeline_counters(vec[None])
 
     def state_memory_bytes(self) -> int:
         return pipeline.state_memory_bytes(self.cfg)

@@ -53,6 +53,9 @@ oracle leaf-for-leaf.
 """
 from __future__ import annotations
 
+import functools
+import time
+
 import numpy as np
 
 import jax
@@ -173,6 +176,11 @@ class ShardedEngine:
         self._pub_cache = None
         self._pub_sig = None
         self._delta_fns: dict = {}
+        # host-side record of the last publication for observability:
+        # {"mode": "full"|"delta"|"republish", "dirty_clusters": int,
+        #  "dirty_frac": float}. Set by every reconcile() path.
+        self.last_publish_info: dict | None = None
+        self._counters_fn = None
 
         # All shards start from ONE shared init (identical centroids /
         # prefilter basis / counters) and diverge only through their
@@ -409,7 +417,8 @@ class ShardedEngine:
         self.serving = ServingSnapshot(index=index,
                                        route_labels=route_labels,
                                        store=store,
-                                       version=self._publish_version)
+                                       version=self._publish_version,
+                                       published_at=time.time())
         self._batches_since_reconcile = 0
         return self.serving
 
@@ -436,6 +445,9 @@ class ShardedEngine:
                 # counters are untouched too, so the snapshot is already
                 # exact — republish it under a fresh version.
                 self._pub_sig = sig
+                self.last_publish_info = {"mode": "republish",
+                                          "dirty_clusters": 0,
+                                          "dirty_frac": 0.0}
                 return self._publish(self.serving.index,
                                      self.serving.route_labels,
                                      self.serving.store)
@@ -449,6 +461,8 @@ class ShardedEngine:
             if self.reconcile_mode == "delta":
                 self._pub_sig = sig if sig is not None \
                     else self._host_signature()
+            self.last_publish_info = {"mode": "full", "dirty_clusters": k,
+                                      "dirty_frac": 1.0}
             return self._publish(index, route_labels, store)
 
         n_bucket = min(k, max(self.delta_bucket_min,
@@ -465,6 +479,9 @@ class ShardedEngine:
             slot_labels, self.serving.store, m_cent, m_rep)
         self._pub_cache = (m_cent, m_rep, slot_labels)
         self._pub_sig = sig
+        self.last_publish_info = {"mode": "delta",
+                                  "dirty_clusters": int(dirty_idx.size),
+                                  "dirty_frac": float(dirty_idx.size) / k}
         return self._publish(index, route_labels, store)
 
     def prepare_publish(self):
@@ -518,6 +535,24 @@ class ShardedEngine:
                                     doc_ids=doc_ids)
 
     # ------------------------------------------------------------ accounting
+    def device_counters(self) -> dict:
+        """Fetch the in-graph pipeline counters across every data shard as
+        ONE small host transfer (a [S, N] i32 matrix), decoded with the
+        per-counter combine rules (arrivals sum, fill levels min/max, ...).
+        Called by the serving runtime at publish time only — never on the
+        query or per-batch ingest path. Delta-publication accounting
+        (``last_publish_info``) rides along as plain host numbers."""
+        if self._counters_fn is None:
+            self._counters_fn = jax.jit(jax.vmap(
+                functools.partial(stages.pipeline_counters, self.cfg)))
+        stacked = np.asarray(self._counters_fn(self.local))
+        out = stages.decode_pipeline_counters(stacked)
+        if self.last_publish_info is not None:
+            out["publish_dirty_clusters"] = \
+                self.last_publish_info["dirty_clusters"]
+            out["publish_dirty_frac"] = self.last_publish_info["dirty_frac"]
+        return out
+
     def index_size(self) -> int:
         if self.serving is None:
             self.reconcile()

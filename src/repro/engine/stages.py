@@ -201,6 +201,112 @@ def delta_upsert_snapshot(index_cfg: index_lib.IndexConfig, prev_index,
     return new_index, jnp.where(valid, lbl, -1), lbl
 
 
+# -------------------------------------------------------------- observability
+# One in-graph reduction of the full pipeline state into a small i32
+# vector — the device side of the telemetry subsystem (``repro.obs``).
+# The engines evaluate it ONCE PER PUBLISH and fetch it as one tiny host
+# transfer; nothing on the per-batch ingest or per-query path ever reads
+# it, so enabling metrics adds zero device syncs to serving.
+PIPELINE_COUNTER_NAMES = (
+    "arrivals",        # docs seen (live rows only)
+    "admitted",        # passed the prefilter (admission accept numerator)
+    "hh_seen",         # arrivals reaching the heavy-hitter counter
+    "hh_evictions",    # counter slot evictions
+    "hh_writes",       # counter slot writes (state changes)
+    "hh_occupied",     # occupied active counter slots
+    "hh_capacity",     # active capacity B_t
+    "hh_max_count",    # largest per-slot count (saturation headroom)
+    "store_live",      # live ring slots across all clusters
+    "store_slots",     # total ring slots (k * depth)
+    "store_min_fill",  # least-filled cluster ring
+    "store_max_fill",  # most-filled cluster ring
+    "index_valid",     # valid prototype index slots
+    "upserts",         # index refresh batches
+)
+
+# How shard-local counter vectors aggregate into one engine-level view
+# (aligned with PIPELINE_COUNTER_NAMES): extensive quantities sum across
+# data shards; per-shard extrema take min/max. The local prototype index
+# is per-shard (the serving index is rebuilt at reconcile), so its slot
+# count reports the shard max rather than a double-counting sum.
+PIPELINE_COUNTER_COMBINE = (
+    "sum", "sum", "sum", "sum", "sum",
+    "sum", "sum", "max",
+    "sum", "sum", "min", "max",
+    "max", "sum",
+)
+assert len(PIPELINE_COUNTER_NAMES) == len(PIPELINE_COUNTER_COMBINE)
+
+
+def pipeline_counters(cfg, state) -> jnp.ndarray:
+    """Reduce a ``PipelineState`` to the ``[len(PIPELINE_COUNTER_NAMES)]``
+    i32 device counter vector. Pure and jit-safe: composed under jit by
+    ``Engine.device_counters`` and under ``vmap`` over the stacked shard
+    states by ``ShardedEngine.device_counters``."""
+    hh = state.hh
+    occ = heavy_hitter.active_mask(hh)
+    hh_occupied = jnp.sum(occ.astype(jnp.int32))
+    hh_max = jnp.max(jnp.where(occ, hh.counts, 0))
+    k, depth = state.store.ids.shape
+    if depth > 0:
+        fill = jnp.sum((state.store.ids >= 0).astype(jnp.int32), axis=1)
+        store_live = jnp.sum(fill)
+        store_min, store_max = jnp.min(fill), jnp.max(fill)
+    else:  # store disabled: all-zero occupancy (static config branch)
+        store_live = store_min = store_max = jnp.int32(0)
+    return jnp.stack([
+        state.arrivals,
+        state.kept,
+        hh.total_seen,
+        hh.total_evictions,
+        hh.total_writes,
+        hh_occupied,
+        hh.active_capacity,
+        hh_max,
+        store_live,
+        jnp.int32(k * depth),
+        store_min,
+        store_max,
+        jnp.sum(state.index.valid.astype(jnp.int32)),
+        state.upserts,
+    ]).astype(jnp.int32)
+
+
+def decode_pipeline_counters(stacked) -> dict:
+    """Host-side decode of fetched counter vectors ``[S, N]`` (S=1 for the
+    single-device engine): aggregate across shards per
+    ``PIPELINE_COUNTER_COMBINE`` and derive the rates the paper's
+    operational claims are stated in (admission accept rate, ring
+    occupancy, counter saturation). Pure numpy — runs on the host after
+    the one publish-time transfer."""
+    import numpy as np
+
+    arr = np.asarray(stacked, dtype=np.int64)
+    assert arr.ndim == 2 and arr.shape[1] == len(PIPELINE_COUNTER_NAMES), \
+        arr.shape
+    out: dict = {}
+    for i, (name, comb) in enumerate(zip(PIPELINE_COUNTER_NAMES,
+                                         PIPELINE_COUNTER_COMBINE)):
+        col = arr[:, i]
+        out[name] = int({"sum": np.sum, "max": np.max,
+                         "min": np.min}[comb](col))
+    out["admit_rate"] = out["admitted"] / max(out["arrivals"], 1)
+    out["store_fill"] = out["store_live"] / max(out["store_slots"], 1)
+    out["hh_occupancy"] = out["hh_occupied"] / max(out["hh_capacity"], 1)
+    return out
+
+
+def store_occupancy(store) -> jnp.ndarray:
+    """[3] i32 (live, min-fill, max-fill) of a (possibly cluster-sharded)
+    serving-snapshot store — the published-store half of the per-cluster
+    ring occupancy counters. jit-safe; evaluated only at publish."""
+    if store.ids.shape[1] == 0:
+        z = jnp.int32(0)
+        return jnp.stack([z, z, z])
+    fill = jnp.sum((store.ids >= 0).astype(jnp.int32), axis=1)
+    return jnp.stack([jnp.sum(fill), jnp.min(fill), jnp.max(fill)])
+
+
 # ---------------------------------------------------------------------- query
 def route(index_cfg: index_lib.IndexConfig, index, route_labels,
           q: jnp.ndarray, nprobe: int) -> jnp.ndarray:

@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels.admit.ref import admit_ref
 from repro.kernels.common import use_pallas_default
 
@@ -31,6 +32,9 @@ def admit(
     """
     if use_pallas is None:
         use_pallas = use_pallas_default()
+    # trace-time only (this wrapper runs Python once per jit trace):
+    # counts (re)compilations per dispatch path, free at execution time
+    obs.count_kernel_trace("admit", "pallas" if use_pallas else "ref")
     if use_pallas:
         from repro.kernels.admit.admit import admit_pallas
 

@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels.common import use_pallas_default
 from repro.kernels.rerank.ref import rerank_topk_ref
 
@@ -34,6 +35,9 @@ def rerank_topk(
     assert 1 <= k <= P * depth, "k must be in [1, nprobe * depth]"
     if use_pallas is None:
         use_pallas = use_pallas_default()
+    # trace-time only (this wrapper runs Python once per jit trace):
+    # counts (re)compilations per dispatch path, free at execution time
+    obs.count_kernel_trace("rerank", "pallas" if use_pallas else "ref")
     if use_pallas:
         from repro.kernels.rerank.rerank import rerank_topk_pallas
 

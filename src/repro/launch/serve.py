@@ -56,6 +56,14 @@ def main():
     ap.add_argument("--reconcile-every", type=int, default=4,
                     help="ingest batches between snapshot publications "
                          "(sharded reconcile / async publish cadence)")
+    ap.add_argument("--metrics-json", default="",
+                    help="enable telemetry and dump the metrics registry "
+                         "as JSON to this path on exit")
+    ap.add_argument("--trace-out", default="",
+                    help="enable span tracing and export a Chrome "
+                         "trace-event JSON (Perfetto-loadable) on exit")
+    ap.add_argument("--report-every", type=int, default=10,
+                    help="serving-report line every N stream batches")
     args = ap.parse_args()
 
     # Device forcing must precede the first jax device query.
@@ -68,10 +76,16 @@ def main():
     import jax
     import numpy as np
 
+    from repro import obs
     from repro.configs.streaming_rag import paper_pipeline_config
     from repro.data.streams import make_stream
+    from repro.obs.report import Reporter
     from repro.serve.runtime import AsyncServer, ServerConfig
     from repro.serve.server import RAGServer
+
+    if args.metrics_json or args.trace_out:
+        obs.enable(metrics=bool(args.metrics_json),
+                   trace=bool(args.trace_out))
 
     stream = make_stream(args.stream, dim=args.dim)
     warm = np.concatenate(
@@ -107,6 +121,7 @@ def main():
         server = RAGServer(cfg, scfg, jax.random.key(0), warmup=warm,
                            engine=engine)
 
+    reporter = Reporter(server, every=args.report_every)
     submitted = 0
     answered = 0
     for i in range(args.batches):
@@ -117,26 +132,27 @@ def main():
             submitted += 1
         outs = server.serve_round(b)
         answered += len(outs)
+        reporter.round_done(i)
 
     # Shutdown: drain the WHOLE pending queue (one flush answers at most
     # max_batch and would silently drop the rest).
     if args.async_serve:
         server.sync()            # final publish covers the stream tail
     answered += len(server.drain())
-    lat = server.latency_stats()
-    print(f"docs ingested    : {server.stats['docs']}")
-    print(f"queries answered : {answered} / {submitted} submitted")
+    reporter.final(submitted, answered)
     assert answered == submitted, "shutdown drain lost queries"
-    print(f"batch latency ms : mean={lat['mean_ms']:.2f} "
-          f"p50={lat['p50_ms']:.2f} p99={lat['p99_ms']:.2f}")
     if args.async_serve:
-        fresh = server.freshness_stats()
-        print(f"freshness        : snapshot v{fresh['snapshot_version']} "
-              f"lag={fresh['lag_docs']} docs")
         server.close()
     print(f"index size       : {server.engine.index_size()} prototypes")
     if mesh_shape is not None:
         print(f"store bytes/dev  : {server.engine.store_bytes_per_device()}")
+    reg, tr = obs.metrics(), obs.tracer()
+    if args.metrics_json and reg is not None:
+        reg.dump_json(args.metrics_json)
+        print(f"metrics json     : {args.metrics_json}")
+    if args.trace_out and tr is not None:
+        tr.export(args.trace_out)
+        print(f"chrome trace     : {args.trace_out} ({len(tr)} events)")
 
 
 if __name__ == "__main__":

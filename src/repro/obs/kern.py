@@ -1,0 +1,81 @@
+"""Per-kernel observability: wall-time timers + modeled HBM traffic.
+
+Kernels execute inside larger jitted programs on the serving path, so
+they cannot be individually timed in production without inserting device
+syncs — exactly what the query hot path must never pay. Instead this
+module profiles kernels **out of band** (``benchmarks/kernel_bench.py``
+and ad-hoc sessions): wall-clock per call via ``block_until_ready``
+around a jitted entry, and *modeled* HBM bytes / flops from the compiled
+HLO through ``analysis/hlo_cost`` — the roofline substitute for a
+hardware profiler, and the number the ROADMAP's "serve-side HBM traffic
+~= one pass over routed rings" target is checked against.
+
+Results land in the active metrics registry (``kernel_<name>_wall_us``,
+``kernel_<name>_modeled_hbm_bytes``, ...) when observability is enabled,
+so benchmark runs export kernel cost next to serving metrics in one dump.
+
+The in-band kernel signal that IS free lives in the dispatchers
+themselves: ``obs.count_kernel_trace`` counts jit traces per
+(kernel, path) — Python that only runs at trace time — surfacing compile
+churn without touching execution.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+from repro import obs
+from repro.analysis import hlo_cost
+
+
+def modeled_cost(fn: Callable[[], object]) -> dict:
+    """Compile ``fn`` (a zero-arg callable closed over its example
+    inputs) and run the loop-aware HLO cost model over the optimized
+    module: modeled HBM bytes, flops, and collective traffic."""
+    import jax
+
+    compiled = jax.jit(fn).lower().compile()
+    cost = hlo_cost.analyze(compiled.as_text())
+    return {
+        "modeled_hbm_bytes": float(cost["bytes"]),
+        "modeled_flops": float(cost["flops"]),
+        "modeled_collective_bytes": float(cost["collective_bytes"]),
+    }
+
+
+def time_wall(fn: Callable[[], object], *, reps: int = 50,
+              rounds: int = 3) -> float:
+    """Median-of-rounds wall seconds per call (compile excluded)."""
+    import jax
+    import numpy as np
+
+    jax.block_until_ready(fn())
+    times = []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        out = None
+        for _ in range(reps):
+            out = fn()
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) / reps)
+    return float(np.median(times))
+
+
+def profile_kernel(name: str, fn: Callable[[], object], *, reps: int = 50,
+                   rounds: int = 3, time_it: bool = True) -> dict:
+    """Wall time + modeled cost for one kernel entry, recorded into the
+    active registry (if any) and returned as a plain dict.
+
+    ``fn`` must be a zero-arg callable over device-resident inputs (the
+    shape ``kernel_bench`` already uses), so compile and timing measure
+    the kernel program itself, not host staging.
+    """
+    out = dict(modeled_cost(fn))
+    if time_it:
+        sec = time_wall(fn, reps=reps, rounds=rounds)
+        out["wall_us"] = 1e6 * sec
+    reg = obs.metrics()
+    if reg is not None:
+        reg.set_many(f"kernel_{name}_", out,
+                     help="kernel_bench profile (wall + modeled HLO cost)")
+    return out

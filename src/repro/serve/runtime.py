@@ -40,6 +40,7 @@ from typing import Callable
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core import pipeline
 from repro.engine.engine import Engine
 
@@ -85,6 +86,10 @@ class QueryFrontend:
             "queries": 0, "docs": 0, "batches": 0,
             "query_latency_ms":
                 collections.deque(maxlen=server_cfg.latency_window),
+            # per-QUERY enqueue->answer latencies (vs per-batch dispatch
+            # above) — the number a caller actually waits
+            "answer_latency_ms":
+                collections.deque(maxlen=server_cfg.latency_window),
         }
 
     # ----------------------------------------------------------------- query
@@ -115,9 +120,19 @@ class QueryFrontend:
             batch = [self._pending.popleft()
                      for _ in range(min(len(self._pending),
                                         self.scfg.max_batch))]
+            depth = len(self._pending)
+        # telemetry is fetched ONCE per batch; both are None when disabled
+        # and every obs branch below is skipped — the hot path stays free
+        reg, tr = obs.metrics(), obs.tracer()
+        fspan = (tr.span("flush", batch=len(batch), queue_depth=depth)
+                 if tr is not None else None)
         raw = [b["q"] for b in batch]
         if self.embed_fn is not None:
-            q = self.embed_fn(raw)
+            if tr is not None:
+                with tr.span("embed", batch=len(batch)):
+                    q = self.embed_fn(raw)
+            else:
+                q = self.embed_fn(raw)
         else:
             q = np.stack(raw)
         t0 = time.perf_counter()
@@ -129,10 +144,6 @@ class QueryFrontend:
                                np.asarray(labels))
         lat = (time.perf_counter() - t0) * 1e3
         meta = self._batch_meta()
-        self.stats["queries"] += len(batch)
-        self.stats["batches"] += 1
-        self.stats["query_latency_ms"].append(lat)
-        self._lat_sum += lat
         out = []
         for i in range(len(batch)):
             out.append({
@@ -144,26 +155,77 @@ class QueryFrontend:
                     (time.perf_counter() - batch[i]["t"]) * 1e3,
                 **meta,
             })
+        # stats mutate under the same lock submit/latency_stats take —
+        # concurrent flushes must not lose increments or tear the windows
+        with self._lock:
+            self.stats["queries"] += len(batch)
+            self.stats["batches"] += 1
+            self.stats["query_latency_ms"].append(lat)
+            for o in out:
+                self.stats["answer_latency_ms"].append(
+                    o["enqueue_to_answer_ms"])
+            self._lat_sum += lat
+        if reg is not None:
+            reg.counter("serve_queries_total").inc(len(batch))
+            reg.counter("serve_batches_total").inc()
+            reg.gauge("serve_queue_depth").set(depth)
+            reg.gauge("serve_batch_fill").set(
+                len(batch) / self.scfg.max_batch)
+            reg.histogram("serve_batch_latency_ms", unit="ms").observe(lat)
+            h = reg.histogram("serve_query_e2e_ms", unit="ms")
+            for o in out:
+                h.observe(o["enqueue_to_answer_ms"])
+        if tr is not None:
+            fspan.args.update(meta)
+            fspan.end()
+            now = tr.now_us()
+            # per-query submit->answer spans, correlated to the snapshot
+            # they were answered from via args (meta carries the version)
+            for o in out:
+                e2e_us = o["enqueue_to_answer_ms"] * 1e3
+                tr.complete("query", now - e2e_us, e2e_us, cat="query",
+                            ticket=o["ticket"], **meta)
         return out
 
     def drain(self) -> list[dict]:
         """Flush until no query is left pending — the shutdown path.
         A single ``flush()`` answers at most ``max_batch``; this loops so
-        no submitted query is ever silently dropped."""
+        no submitted query is ever silently dropped. ``flush`` checks the
+        pending deque under the lock itself, so drain never reads shared
+        state unlocked."""
         out: list[dict] = []
-        while self._pending:
-            out.extend(self.flush())
-        return out
+        while True:
+            got = self.flush()
+            if not got:
+                return out
+            out.extend(got)
 
     def latency_stats(self) -> dict:
-        """Running mean over all batches; p50/p99 over the bounded window."""
-        window = np.asarray(self.stats["query_latency_ms"], dtype=np.float64)
-        n = self.stats["batches"]
+        """Running mean over all batches; percentiles over the bounded
+        windows — per-batch dispatch latency (``p*_ms``) and per-query
+        enqueue→answer latency (``answer_p*_ms``)."""
+        with self._lock:
+            window = np.asarray(self.stats["query_latency_ms"],
+                                dtype=np.float64)
+            answers = np.asarray(self.stats["answer_latency_ms"],
+                                 dtype=np.float64)
+            n = self.stats["batches"]
+            lat_sum = self._lat_sum
+
+        def pct(a, q):
+            return float(np.percentile(a, q)) if a.size else 0.0
+
         return {
             "batches": n,
-            "mean_ms": self._lat_sum / n if n else 0.0,
-            "p50_ms": float(np.percentile(window, 50)) if window.size else 0.0,
-            "p99_ms": float(np.percentile(window, 99)) if window.size else 0.0,
+            "mean_ms": lat_sum / n if n else 0.0,
+            "p50_ms": pct(window, 50),
+            "p90_ms": pct(window, 90),
+            "p99_ms": pct(window, 99),
+            "window": int(window.size),
+            "answer_p50_ms": pct(answers, 50),
+            "answer_p90_ms": pct(answers, 90),
+            "answer_p99_ms": pct(answers, 99),
+            "answer_window": int(answers.size),
         }
 
     # ------------------------------------------------------------- interface
@@ -238,8 +300,14 @@ class AsyncServer(QueryFrontend):
                     item.set()
                     continue
                 x, ids = item
+                tr = obs.tracer()
+                span = (tr.span("ingest.admit", cat="ingest",
+                                batch=int(np.asarray(ids).size))
+                        if tr is not None else None)
                 with self._dispatch_lock:
                     self.engine.ingest(x, ids)
+                if span is not None:  # dispatch time (execution is async)
+                    span.end()
                 self._docs_ingested += int(np.sum(np.asarray(ids) >= 0))
                 self._since_publish += 1
                 if self._since_publish >= self.publish_every:
@@ -251,17 +319,47 @@ class AsyncServer(QueryFrontend):
         # capture the doc watermark BEFORE publishing: the snapshot holds
         # at least everything ingested up to here
         docs = self._docs_ingested
+        reg, tr = obs.metrics(), obs.tracer()
+        span = (tr.span("ingest.publish", cat="ingest")
+                if tr is not None else None)
         # host-blocking publish prep (e.g. the sharded engine's dirty
         # signature waits on ingest execution) runs OUTSIDE the dispatch
         # lock so a concurrent flush never stalls behind it
         prepare = getattr(self.engine, "prepare_publish", None)
         if prepare is not None:
             prepare()
+        t0 = time.perf_counter()
         with self._dispatch_lock:
             snap = self.engine.publish()
         self._snapshot = snap        # atomic swap (single ref assignment)
         self._published_docs = docs
         self._since_publish = 0
+        if reg is None and tr is None:
+            return
+        # publish-time telemetry ONLY: the device-counter fetch below is
+        # the one host transfer metrics add, and it runs here on the
+        # ingest thread — never on the query path
+        pub_ms = (time.perf_counter() - t0) * 1e3
+        lag = self.stats["docs"] - docs
+        info = getattr(self.engine, "last_publish_info", None)
+        if span is not None:
+            span.args["version"] = snap.version
+            if info is not None:
+                span.args.update(info)
+            span.end()
+            tr.counter("freshness", {"lag_docs": lag,
+                                     "snapshot_version": snap.version})
+        if reg is not None:
+            reg.counter("publish_total").inc()
+            if info is not None:
+                reg.counter(f"publish_{info['mode']}_total").inc()
+            reg.histogram("publish_latency_ms", unit="ms").observe(pub_ms)
+            reg.gauge("publish_lag_docs").set(lag)
+            reg.gauge("snapshot_version").set(snap.version)
+            counters = getattr(self.engine, "device_counters", None)
+            if counters is not None:
+                reg.set_many("pipeline_", counters(),
+                             help="device pipeline counters (publish fetch)")
 
     def _check(self):
         if self._error is not None:
@@ -290,10 +388,22 @@ class AsyncServer(QueryFrontend):
         queue: blocks the producer — never the query path — when full)."""
         assert not self._closed, "server is closed"
         ids = np.asarray(doc_ids)
-        self._put((np.asarray(embeddings), ids), timeout)
+        tr = obs.tracer()
+        if tr is not None:
+            with tr.span("ingest.enqueue", cat="ingest",
+                         batch=int(ids.size)):
+                self._put((np.asarray(embeddings), ids), timeout)
+        else:
+            self._put((np.asarray(embeddings), ids), timeout)
         # count live rows only (doc_id < 0 is the dead/padding sentinel),
         # mirroring _docs_ingested so freshness lag can actually reach 0
-        self.stats["docs"] += int(np.sum(ids >= 0))
+        live = int(np.sum(ids >= 0))
+        with self._lock:
+            self.stats["docs"] += live
+        reg = obs.metrics()
+        if reg is not None:
+            reg.counter("ingest_docs_enqueued_total").inc(live)
+            reg.gauge("ingest_queue_depth").set(self._queue.qsize())
 
     def _query_batch(self, q: np.ndarray):
         self._check()
@@ -352,10 +462,18 @@ class AsyncServer(QueryFrontend):
 
     # ------------------------------------------------------------ accounting
     def freshness_stats(self) -> dict:
-        """How far the published snapshot trails the ingested stream."""
+        """How far the published snapshot trails the ingested stream —
+        in docs (lag) and in wall-clock seconds (snapshot age). Age is
+        ``None`` when the pinned snapshot was never actually published
+        (``published_at == 0.0``, e.g. a host-oracle snapshot injected in
+        tests), so a bogus 55-years age can never be reported."""
         snap = self._snapshot
+        published_at = snap.published_at if snap.published_at > 0 else None
         return {
             "snapshot_version": snap.version,
+            "published_at": published_at,
+            "snapshot_age_s": (time.time() - published_at
+                               if published_at is not None else None),
             "docs_enqueued": self.stats["docs"],
             "docs_ingested": self._docs_ingested,
             "docs_published": self._published_docs,

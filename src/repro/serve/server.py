@@ -29,6 +29,7 @@ from __future__ import annotations
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core import pipeline
 from repro.engine.engine import Engine
 from repro.serve.runtime import QueryFrontend, ServerConfig
@@ -57,8 +58,18 @@ class RAGServer(QueryFrontend):
 
     # ---------------------------------------------------------------- ingest
     def ingest(self, embeddings: np.ndarray, doc_ids: np.ndarray):
-        self.engine.ingest(embeddings, doc_ids)
-        self.stats["docs"] += len(doc_ids)
+        tr = obs.tracer()
+        if tr is not None:
+            with tr.span("ingest.admit", cat="ingest",
+                         batch=len(doc_ids)):
+                self.engine.ingest(embeddings, doc_ids)
+        else:
+            self.engine.ingest(embeddings, doc_ids)
+        with self._lock:
+            self.stats["docs"] += len(doc_ids)
+        reg = obs.metrics()
+        if reg is not None:
+            reg.counter("ingest_docs_enqueued_total").inc(len(doc_ids))
 
     # ----------------------------------------------------------------- query
     def _query_batch(self, q: np.ndarray):

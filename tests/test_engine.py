@@ -179,7 +179,9 @@ def test_server_runs_on_explicit_engine():
     # reports through latency_stats for exactly this reason)
     empty = server.latency_stats()
     assert empty == {"batches": 0, "mean_ms": 0.0, "p50_ms": 0.0,
-                     "p99_ms": 0.0}
+                     "p90_ms": 0.0, "p99_ms": 0.0, "window": 0,
+                     "answer_p50_ms": 0.0, "answer_p90_ms": 0.0,
+                     "answer_p99_ms": 0.0, "answer_window": 0}
     answered = []
     for _ in range(4):
         b = s.next_batch(32)

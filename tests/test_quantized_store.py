@@ -410,7 +410,10 @@ def test_sharded_quantized_store_delta_identity_and_query_parity():
                 eng.ingest(b["embedding"], b["doc_id"])
             sf, sd = full.reconcile(), delta.reconcile()
             assert sf.version == sd.version == i + 1
-            for a, c in zip(jax.tree.leaves(sf), jax.tree.leaves(sd)):
+            # published_at is wall-clock (necessarily differs); device
+            # leaves must be bit-identical
+            for a, c in zip(jax.tree.leaves(sf._replace(published_at=0.0)),
+                            jax.tree.leaves(sd._replace(published_at=0.0))):
                 np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
         assert len(delta._delta_fns) > 0, "delta path never exercised"
         assert sf.store.embs.dtype == jnp.int8
