@@ -163,8 +163,18 @@ def distributed_rerank_topk(qn, embs, live, ids, routes, k: int,
                              routes - off, -1)
     scores, pos = rerank_topk(qn, embs, live, local_routes, k,
                               scales=scales, use_pallas=use_pallas)
+    return _merge_local_rerank(scores, pos, local_routes, ids, k, P, depth,
+                               axis)
 
-    # resolve each live local candidate's doc id while its ring is local
+
+def _merge_local_rerank(scores, pos, local_routes, ids, k: int, P: int,
+                        depth: int, axis):
+    """Shared tail of the distributed serve/rerank paths: resolve each live
+    local candidate's doc id while its ring is still addressable, then
+    all_gather the per-shard top-k and merge with the lowest-position
+    tie-break — bit-identical to single-device ``lax.top_k`` over the flat
+    [Q, P*depth] score table (stable sort by position, then stable sort by
+    descending score)."""
     dead = pos < 0
     j = jnp.clip(pos // depth, 0, P - 1)
     slot = jnp.clip(pos % depth, 0, depth - 1)
@@ -176,9 +186,6 @@ def distributed_rerank_topk(qn, embs, live, ids, routes, k: int,
     all_pos = jax.lax.all_gather(pos_key, axis, axis=1, tiled=True)
     all_doc = jax.lax.all_gather(doc, axis, axis=1, tiled=True)
 
-    # top-k with lowest-position tie-break == single-device lax.top_k over
-    # the flat [Q, P*depth] score table: stable sort by position, then
-    # stable sort by descending score.
     o2 = jnp.argsort(all_pos, axis=1)
     sc2 = jnp.take_along_axis(all_sc, o2, axis=1)
     pos2 = jnp.take_along_axis(all_pos, o2, axis=1)
@@ -190,6 +197,46 @@ def distributed_rerank_topk(qn, embs, live, ids, routes, k: int,
     alive = sc > NEG_INF / 2
     return (sc, jnp.where(alive, posk, -1).astype(jnp.int32),
             jnp.where(alive, dock, -1).astype(jnp.int32))
+
+
+def distributed_serve_topk(qr, qn, vectors, valid, route_labels, embs, live,
+                           ids, k: int, nprobe: int, axis: str = "model",
+                           use_pallas: bool | None = None, scales=None):
+    """Distributed FUSED serve path (inside shard_map): every shard runs
+    the one-program route + gather + dequant-rerank + top-k kernel over
+    its cluster slice, then the shards merge exactly like
+    ``distributed_rerank_topk``.
+
+    qr/qn replicated [Q, d] (stage-1/stage-2 query vectors, caller-side
+    normalization policy as in ``stages.serve_topk``); vectors [cap, d] /
+    valid [cap] / route_labels [cap] the REPLICATED prototype index +
+    slot -> global-cluster snapshot; embs/live/ids/scales this shard's
+    cluster slice (global clusters [off, off+kl)).
+
+    Localizing the label table BEFORE the fused kernel — out-of-shard
+    slots become -1 — is exactly the staged global-route-then-mask: the
+    prototype index is replicated, so every shard extracts the same
+    top-``nprobe`` slots in the same order, and each route position j
+    holds either the localized cluster or -1. The globally-consistent
+    route list is recovered with a ``pmax`` over the per-shard partials
+    (each position is live on exactly the owning shard).
+
+    Returns (scores [Q,k] desc, pos [Q,k], doc_ids [Q,k],
+    routes [Q,nprobe] GLOBAL cluster ids); dead entries are -1.
+    """
+    from repro.kernels.serve.ops import serve_topk
+
+    kl, depth = embs.shape[0], embs.shape[1]
+    off = jax.lax.axis_index(axis) * kl
+    local_labels = jnp.where((route_labels >= off) & (route_labels < off + kl),
+                             route_labels - off, -1)
+    scores, pos, local_rt = serve_topk(qr, qn, vectors, valid, local_labels,
+                                       embs, live, k, nprobe, scales=scales,
+                                       use_pallas=use_pallas)
+    routes = jax.lax.pmax(jnp.where(local_rt >= 0, local_rt + off, -1), axis)
+    sc, posk, dock = _merge_local_rerank(scores, pos, local_rt, ids, k,
+                                         nprobe, depth, axis)
+    return sc, posk, dock, routes
 
 
 def hierarchical_psum(x, pod_axis: str | None, data_axis: str):

@@ -24,7 +24,6 @@ import numpy as np
 
 from repro.core import index as index_lib, pipeline
 from repro.engine import stages
-from repro.kernels.common import l2_normalize
 from repro.store import docstore
 
 
@@ -125,11 +124,11 @@ def query_impl(cfg: "pipeline.PipelineConfig", state: "pipeline.PipelineState",
     depth = cfg.store_depth
     assert depth > 0, "two_stage requires store_depth > 0"
     assert k <= nprobe * depth, "k must be <= nprobe * store_depth"
-    routes = stages.route(cfg.index, state.index, state.route_labels, q,
-                          nprobe)
-    qn = l2_normalize(q)
-    scores, pos = stages.rerank(state.store, qn, routes, k,
-                                cfg.clus.use_pallas)
+    # the ONE two-stage query implementation: fused route + gather +
+    # dequant-rerank + top-k (staged route -> rerank when use_pallas=False)
+    scores, pos, routes = stages.serve_topk(
+        cfg.index, state.index, state.route_labels, state.store, q, k,
+        nprobe, cfg.clus.use_pallas)
     return stages.decode_rerank(state.store.ids, routes, scores, pos, depth,
                                 nprobe)
 
@@ -147,9 +146,9 @@ def snapshot_query_impl(cfg: "pipeline.PipelineConfig", index, route_labels,
     depth = cfg.store_depth
     assert depth > 0, "two_stage requires store_depth > 0"
     assert k <= nprobe * depth, "k must be <= nprobe * store_depth"
-    routes = stages.route(cfg.index, index, route_labels, q, nprobe)
-    qn = l2_normalize(q)
-    scores, pos = stages.rerank(store, qn, routes, k, cfg.clus.use_pallas)
+    scores, pos, routes = stages.serve_topk(
+        cfg.index, index, route_labels, store, q, k, nprobe,
+        cfg.clus.use_pallas)
     return stages.decode_rerank(store.ids, routes, scores, pos, depth, nprobe)
 
 

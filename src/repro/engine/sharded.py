@@ -65,7 +65,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import clustering, heavy_hitter, index as index_lib, pipeline
 from repro.distributed import sharding as shard_rules
 from repro.distributed.collectives import (compat_shard_map,
-                                           distributed_rerank_topk)
+                                           distributed_rerank_topk,
+                                           distributed_serve_topk)
 from repro.engine import stages
 from repro.engine.engine import ServingSnapshot, ingest_impl
 from repro.kernels.common import l2_normalize
@@ -199,6 +200,7 @@ class ShardedEngine:
         self._ingest_fn = self._build_ingest()
         self._reconcile_fn = self._build_reconcile()
         self._rerank_fns: dict = {}
+        self._serve_fns: dict = {}
 
     @staticmethod
     def shard_init_state(cfg, key, shard: int, n_data: int,
@@ -369,6 +371,34 @@ class ShardedEngine:
 
         return jax.jit(run)
 
+    def _build_serve(self, k: int, nprobe: int):
+        """Fused serve path over the cluster-sharded snapshot store: the
+        (small) prototype index rides in replicated, every shard runs the
+        one-program route + gather + dequant-rerank + top-k over its
+        cluster slice, and the shards merge exactly like the staged
+        ``_build_rerank`` (which stays as the pinned staged reference)."""
+        cfg = self.cfg
+        model_axis = self.model_axis
+        use_pallas = cfg.clus.use_pallas
+
+        def shard_fn(qr, qn, vectors, valid, route_labels, store):
+            scales = (store.scales if store.embs.dtype == jnp.int8
+                      else None)
+            return distributed_serve_topk(
+                qr, qn, vectors, valid, route_labels, store.embs,
+                docstore.live_mask(store), store.ids, k, nprobe,
+                model_axis, use_pallas=use_pallas, scales=scales)
+
+        def run(qr, qn, vectors, valid, route_labels, store):
+            fn = compat_shard_map(
+                shard_fn, mesh=self.mesh,
+                in_specs=(P(), P(), P(), P(), P(),
+                          shard_rules.leading_axis_pspecs(store, model_axis)),
+                out_specs=(P(), P(), P(), P()), check_vma=False)
+            return fn(qr, qn, vectors, valid, route_labels, store)
+
+        return jax.jit(run)
+
     # -------------------------------------------------------------- protocol
     def ingest(self, x, doc_ids):
         """Ingest one global microbatch [B, d]: split contiguously into
@@ -506,10 +536,16 @@ class ShardedEngine:
                                    nprobe=nprobe)
 
     def query_snapshot(self, snap: ServingSnapshot, q, k: int = 10, *,
-                       two_stage: bool = False, nprobe: int = 8):
+                       two_stage: bool = False, nprobe: int = 8,
+                       staged: bool = False):
         """Answer from an explicitly published snapshot (the async runtime
         pins the snapshot it hands out per batch, so in-flight queries are
-        isolated from concurrent reconciles)."""
+        isolated from concurrent reconciles).
+
+        Two-stage queries run the FUSED serve path; ``staged=True`` forces
+        the original route-program + rerank-program composition — kept as
+        the pinned reference the fused path is ids-identical to (parity
+        tests and the staged-vs-fused benchmark drive it)."""
         q = jnp.asarray(q, jnp.float32)
         cfg = self.cfg
         if not two_stage:
@@ -519,18 +555,36 @@ class ShardedEngine:
         depth = cfg.store_depth
         assert depth > 0, "two_stage requires store_depth > 0"
         assert k <= nprobe * depth, "k must be <= nprobe * store_depth"
-        routes = stages.route(cfg.index, snap.index, snap.route_labels, q,
-                              nprobe)
-        qn = l2_normalize(q)
+        if staged:
+            routes = stages.route(cfg.index, snap.index, snap.route_labels,
+                                  q, nprobe)
+            qn = l2_normalize(q)
+            if self.model_axis is None:
+                scores, pos = stages.rerank(snap.store, qn, routes, k,
+                                            cfg.clus.use_pallas)
+                return stages.decode_rerank(snap.store.ids, routes, scores,
+                                            pos, depth, nprobe)
+            key = (k, nprobe)
+            if key not in self._rerank_fns:
+                self._rerank_fns[key] = self._build_rerank(k, nprobe)
+            scores, pos, doc_ids = self._rerank_fns[key](qn, routes,
+                                                         snap.store)
+            return stages.decode_rerank(None, routes, scores, pos, depth,
+                                        nprobe, doc_ids=doc_ids)
         if self.model_axis is None:
-            scores, pos = stages.rerank(snap.store, qn, routes, k,
-                                        cfg.clus.use_pallas)
+            scores, pos, routes = stages.serve_topk(
+                cfg.index, snap.index, snap.route_labels, snap.store, q, k,
+                nprobe, cfg.clus.use_pallas)
             return stages.decode_rerank(snap.store.ids, routes, scores, pos,
                                         depth, nprobe)
+        qn = l2_normalize(q)
+        qr = qn if cfg.index.normalize else q
         key = (k, nprobe)
-        if key not in self._rerank_fns:
-            self._rerank_fns[key] = self._build_rerank(k, nprobe)
-        scores, pos, doc_ids = self._rerank_fns[key](qn, routes, snap.store)
+        if key not in self._serve_fns:
+            self._serve_fns[key] = self._build_serve(k, nprobe)
+        scores, pos, doc_ids, routes = self._serve_fns[key](
+            qr, qn, snap.index.vectors, snap.index.valid, snap.route_labels,
+            snap.store)
         return stages.decode_rerank(None, routes, scores, pos, depth, nprobe,
                                     doc_ids=doc_ids)
 

@@ -24,8 +24,12 @@ Stage map (ingest):
 
 Stage map (two-stage query):
 
-    route (prototype index, replicated) ──► rerank (ring buffers, shardable)
-                                              └──► decode_rerank
+    serve_topk (fused route + gather + dequant-rerank + top-k,
+      │         one device program)     ──► decode_rerank
+      └── staged reference: route (prototype index, replicated)
+          ──► rerank (ring buffers, shardable), the decomposition
+          ``serve_topk`` runs with use_pallas=False — identical
+          routes/pos (scores to fp32 accumulation order)
 """
 from __future__ import annotations
 
@@ -36,6 +40,7 @@ from repro.core import clustering, heavy_hitter, index as index_lib, prefilter
 from repro.kernels.admit.ops import admit as admit_op
 from repro.kernels.common import NEG_INF, l2_normalize
 from repro.kernels.rerank.ops import rerank_topk
+from repro.kernels.serve.ops import serve_topk as serve_topk_op
 from repro.store import docstore
 
 
@@ -331,6 +336,35 @@ def rerank(store, qn: jnp.ndarray, routes: jnp.ndarray, k: int,
     scales = store.scales if store.embs.dtype == jnp.int8 else None
     return rerank_topk(qn, store.embs, docstore.live_mask(store), routes, k,
                        scales=scales, use_pallas=use_pallas)
+
+
+def serve_topk(index_cfg: index_lib.IndexConfig, index, route_labels, store,
+               q: jnp.ndarray, k: int, nprobe: int,
+               use_pallas: bool | None):
+    """Stages 1+2 fused: ONE device program routes each query through the
+    prototype index (running top-``nprobe``, no [Q, cap] score matrix in
+    HBM), DMAs only the routed ring tiles, dequant-reranks them with fp32
+    accumulation, and emits the final top-``k`` — the single two-stage
+    query implementation every engine composes over (``Engine.query``,
+    ``Engine.query_snapshot``, the sharded per-shard rerank, the async
+    serving runtime).
+
+    Query normalization policy matches the staged path exactly: the
+    stage-1 vector follows the index config (unit prototypes -> unit
+    queries), the stage-2 vector is always unit-norm for cosine. With
+    ``use_pallas=False`` (the CPU default) the dispatcher runs the staged
+    mips -> label-map -> rerank reference composition, so ``route`` +
+    ``rerank`` stay the pinned oracle.
+
+    Returns (scores [Q,k] desc, pos [Q,k] = j*depth+slot into the route
+    list, routes [Q,nprobe] cluster ids; -1 for dead entries everywhere).
+    """
+    qn = l2_normalize(q)
+    qr = qn if index_cfg.normalize else q.astype(jnp.float32)
+    scales = store.scales if store.embs.dtype == jnp.int8 else None
+    return serve_topk_op(qr, qn, index.vectors, index.valid, route_labels,
+                         store.embs, docstore.live_mask(store), k, nprobe,
+                         scales=scales, use_pallas=use_pallas)
 
 
 def decode_rerank(store_ids, routes, scores, pos, depth: int, nprobe: int,

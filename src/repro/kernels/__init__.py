@@ -12,6 +12,8 @@ Kernels:
   assign    — fused nearest-centroid assignment (paper stage 2)
   mips      — fused MIPS score + per-block top-k retrieval (paper stage 4)
   rerank    — routed gather + fused cosine rerank top-k (two-stage stage 2)
+  serve     — fused serve path: route + gather + dequant-rerank + top-k
+              in one program (two-stage query, one HBM pass)
   bag       — TBE-style EmbeddingBag gather+segment-reduce (recsys substrate)
 """
 from repro.kernels.admit.ops import admit
@@ -20,6 +22,7 @@ from repro.kernels.bag.ops import embedding_bag
 from repro.kernels.mips.ops import mips_topk
 from repro.kernels.prefilter.ops import prefilter, prefilter_scores
 from repro.kernels.rerank.ops import rerank_topk
+from repro.kernels.serve.ops import serve_topk
 
 __all__ = [
     "admit",
@@ -29,4 +32,5 @@ __all__ = [
     "prefilter",
     "prefilter_scores",
     "rerank_topk",
+    "serve_topk",
 ]

@@ -1,0 +1,60 @@
+"""jit'd public wrapper for the fused serve path (two-stage query)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro import obs
+from repro.kernels import tuning
+from repro.kernels.common import use_pallas_default
+from repro.kernels.serve.ref import serve_topk_ref
+
+
+def serve_topk(
+    qr: jnp.ndarray,
+    qn: jnp.ndarray,
+    vectors: jnp.ndarray,
+    valid: jnp.ndarray,
+    route_labels: jnp.ndarray,
+    embs: jnp.ndarray,
+    live: jnp.ndarray,
+    k: int,
+    nprobe: int,
+    *,
+    scales: jnp.ndarray | None = None,
+    use_pallas: bool | None = None,
+):
+    """Fused route + gather + dequant-rerank + top-k, one device program.
+
+    qr/qn [Q, d] stage-1/stage-2 query vectors (caller applies the index
+    normalization policy to qr; qn is always unit-norm for cosine);
+    vectors [cap, d] + valid [cap] the prototype index; route_labels
+    [cap] i32 slot -> cluster snapshot (-1 dead); embs [C, depth, d]
+    (f32, or i8 with ``scales`` [C, depth] f32); live [C, depth] bool;
+    k <= nprobe * depth. The fused kernel keeps route scores and routed
+    ring tiles in VMEM — one HBM pass over the routed rings per query —
+    while the ``use_pallas=False`` path runs the same math as the staged
+    mips -> label-map -> rerank composition (the pinned reference:
+    ids/pos/routes bit-identical, scores to fp32 accumulation order).
+
+    Returns (scores [Q, k] f32 desc, pos [Q, k] i32, routes [Q, nprobe]
+    i32) with the staged path's dead -> -1 semantics; pos encodes
+    ``j * depth + slot`` into the query's route list.
+    """
+    depth = embs.shape[1]
+    assert 1 <= k <= nprobe * depth, "k must be in [1, nprobe * depth]"
+    if use_pallas is None:
+        use_pallas = use_pallas_default()
+    # trace-time only (this wrapper runs Python once per jit trace):
+    # counts (re)compilations per dispatch path, free at execution time
+    obs.count_kernel_trace("serve", "pallas" if use_pallas else "ref")
+    if use_pallas:
+        from repro.kernels.serve.serve import serve_topk_pallas
+
+        # autotuned (bq, bk, bd) tiles, if the cache has a winner for
+        # this platform/dtype — also a trace-time-only lookup
+        tile = tuning.lookup(
+            "serve", "int8" if embs.dtype == jnp.int8 else "fp32")
+        return serve_topk_pallas(qr, qn, vectors, valid, route_labels,
+                                 embs, live, k, nprobe, scales, **tile)
+    return serve_topk_ref(qr, qn, vectors, valid, route_labels, embs,
+                          live, k, nprobe, scales)

@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for the fused serve path (two-stage query, one call).
+
+This is EXACTLY the staged composition the engine used to run as separate
+stages — ``mips_topk_ref`` over the prototype index (stage 1), the
+slot -> cluster route-label snapshot lookup, then ``rerank_topk_ref`` over
+the routed ring buffers (stage 2) — so the staged path stays the pinned
+reference for the fused Pallas kernel, piece for piece.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import NEG_INF
+from repro.kernels.mips.ref import mips_topk_ref
+from repro.kernels.rerank.ref import rerank_topk_ref
+
+
+def serve_topk_ref(
+    qr: jnp.ndarray,
+    qn: jnp.ndarray,
+    vectors: jnp.ndarray,
+    valid: jnp.ndarray,
+    route_labels: jnp.ndarray,
+    embs: jnp.ndarray,
+    live: jnp.ndarray,
+    k: int,
+    nprobe: int,
+    scales: jnp.ndarray | None = None,
+):
+    """Route + gather + dequant-rerank + top-k, as one function.
+
+    Args:
+      qr: [Q, d] stage-1 query vectors (pre-normalized iff the index holds
+        unit prototypes — the caller applies the index config's policy).
+      qn: [Q, d] stage-2 query vectors (always pre-normalized for cosine;
+        identical to ``qr`` for the default normalized index).
+      vectors: [cap, d] f32 prototype index rows.
+      valid: [cap] bool — retrievable index slots.
+      route_labels: [cap] i32 slot -> cluster id snapshot (-1 = dead slot).
+      embs: [C, depth, d] per-cluster ring buffers (f32, or int8 with
+        ``scales``).
+      live: [C, depth] bool — ring slots holding a real document.
+      k: results per query (k <= nprobe * depth).
+      nprobe: clusters routed per query.
+      scales: optional [C, depth] f32 per-slot dequantization scales.
+
+    Returns:
+      scores: [Q, k] f32 descending (NEG_INF for dead entries).
+      pos: [Q, k] i32 positions j * depth + slot into the route list
+        (-1 = dead entry; lowest-position tie-break, as everywhere).
+      routes: [Q, nprobe] i32 routed cluster ids (-1 = no route).
+    """
+    sc1, slots = mips_topk_ref(qr, vectors, valid, nprobe)
+    labels = route_labels[slots]
+    routes = jnp.where((sc1 > NEG_INF / 2) & (labels >= 0), labels, -1)
+    scores, pos = rerank_topk_ref(qn, embs, live, routes, k, scales)
+    return scores, pos, routes

@@ -1,0 +1,111 @@
+"""Autotuned tile cache for the Pallas kernel dispatchers.
+
+``benchmarks/kernel_bench.py --autotune`` sweeps the tile space of a
+kernel — (bm, bk, depth-tile), named per kernel — measures each
+configuration, and persists the winner here. Dispatchers (``ops.py``
+wrappers) call :func:`lookup` at trace time, so a cached winner changes
+the compiled tiling with zero execution-time cost: the lookup is plain
+Python that runs once per jit trace, exactly like
+``obs.count_kernel_trace``.
+
+Cache file format (JSON, platform-keyed so one checkout can carry
+winners for several backends)::
+
+    {
+      "cpu": {
+        "serve/int8": {"bq": 8, "bk": 128, "bd": 16,
+                        "us_per_call": 412.0, "modeled_hbm_bytes": 803072},
+        ...
+      },
+      "tpu": {...}
+    }
+
+The default location is ``tune_cache.json`` next to this module (so a
+tuned checkout serves tuned); ``REPRO_TUNE_CACHE`` overrides the path
+(CI smoke and tests point it at a temp file). Entries are keyed by
+(kernel, dtype) only — a winner tuned at one shape applies to every
+shape of that kernel/dtype on the platform, which matches how the
+serving engine uses fixed paper-default shapes per deployment.
+
+``applied`` records every lookup that actually reached a dispatcher
+(key ``platform/kernel/dtype`` -> tile dict), so tests and the autotune
+smoke can assert the cache was *consumed*, not merely written.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+_ENV = "REPRO_TUNE_CACHE"
+_DEFAULT = os.path.join(os.path.dirname(__file__), "tune_cache.json")
+
+# tile params a dispatcher may pass through to its kernel, per kernel name
+TUNABLE_KEYS = {"serve": ("bq", "bk", "bd"), "mips": ("bq", "bn")}
+
+# memo of the parsed cache file, keyed by path so an env-var change (or a
+# test pointing at a fresh temp file) invalidates it naturally
+_memo: dict[str, dict] = {}
+
+# trace-time consumption record: "platform/kernel/dtype" -> tile dict
+applied: dict[str, dict] = {}
+
+
+def cache_path() -> str:
+    return os.environ.get(_ENV) or _DEFAULT
+
+
+def platform() -> str:
+    import jax
+
+    return jax.default_backend()
+
+
+def _load(path: str) -> dict:
+    if path not in _memo:
+        try:
+            with open(path) as f:
+                _memo[path] = json.load(f)
+        except (OSError, ValueError):
+            _memo[path] = {}
+    return _memo[path]
+
+
+def reload() -> None:
+    """Drop the in-process memo so the next lookup re-reads the file
+    (used after ``record`` persists a new winner mid-process)."""
+    _memo.clear()
+
+
+def lookup(kernel: str, dtype: str) -> dict:
+    """Tile overrides for (platform, kernel, dtype) — ``{}`` when untuned.
+
+    Called by ops dispatchers at TRACE time only. Unknown keys are
+    filtered against ``TUNABLE_KEYS`` so a stale cache file can never
+    crash a dispatcher; a hit is recorded in :data:`applied`.
+    """
+    entry = _load(cache_path()).get(platform(), {}).get(f"{kernel}/{dtype}")
+    if not entry:
+        return {}
+    keys = TUNABLE_KEYS.get(kernel, ())
+    tile = {k: int(v) for k, v in entry.items() if k in keys}
+    if tile:
+        applied[f"{platform()}/{kernel}/{dtype}"] = dict(tile)
+    return tile
+
+
+def record(kernel: str, dtype: str, tile: dict, metrics: dict | None = None,
+           path: str | None = None) -> str:
+    """Persist ``tile`` (+ benchmark ``metrics``) as the winner for
+    (current platform, kernel, dtype) and return the cache path written."""
+    path = path or cache_path()
+    data = dict(_load(path))
+    plat = dict(data.get(platform(), {}))
+    entry = {k: int(v) for k, v in tile.items()}
+    entry.update({k: float(v) for k, v in (metrics or {}).items()})
+    plat[f"{kernel}/{dtype}"] = entry
+    data[platform()] = plat
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+    _memo[path] = data
+    return path

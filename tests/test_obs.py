@@ -450,3 +450,35 @@ def test_kernel_trace_counting_is_trace_time_only():
         fn(q, embs, live, routes)  # one trace, five executions
     name = "kernel_traces_total_rerank_ref"
     assert reg.counter(name).value == 1
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_serve_kernel_compiles_once_across_steady_state_queries(use_pallas):
+    """The fused serve kernel must compile exactly once for a steady-state
+    query workload (fixed Q/k/nprobe, snapshot leaves changing values but
+    not shapes) — a silent re-trace per query would erase the single-
+    program latency win. Five query batches against five distinct
+    published snapshots -> one jit trace on the serve dispatch path."""
+    import jax.numpy as jnp
+
+    from repro.configs.streaming_rag import paper_pipeline_config
+    import dataclasses
+
+    obs.enable(trace=False)
+    reg = obs.metrics()
+    cfg = paper_pipeline_config(dim=DIM, k=16, capacity=12,
+                                update_interval=24, alpha=-1.0,
+                                store_depth=4)
+    cfg = dataclasses.replace(
+        cfg, clus=dataclasses.replace(cfg.clus, use_pallas=use_pallas))
+    eng = Engine(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    path = "pallas" if use_pallas else "ref"
+    name = f"kernel_traces_total_serve_{path}"
+    for step in range(5):
+        x = jnp.asarray(rng.normal(size=(24, DIM)), jnp.float32)
+        eng.ingest(x, jnp.arange(24, dtype=jnp.int32) + 24 * step)
+        snap = eng.publish()  # fresh leaves every iteration, same shapes
+        q = jnp.asarray(rng.normal(size=(6, DIM)), jnp.float32)
+        eng.query_snapshot(snap, q, k=4, two_stage=True, nprobe=3)
+    assert reg.counter(name).value == 1
