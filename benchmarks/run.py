@@ -25,7 +25,8 @@ def _tables():
                             table12_component_ablation, table13_downstream,
                             table14_two_stage, table15_sharded,
                             table16_async_serving, table17_quantized_store,
-                            table18_ingest_throughput, table19_serve_fusion)
+                            table18_ingest_throughput, table19_serve_fusion,
+                            table20_overload)
     scale = 0.5 if FAST else 1.0
 
     def n(x):
@@ -48,6 +49,7 @@ def _tables():
         ("table17", lambda: table17_quantized_store.run(n_batches=n(24))),
         ("table18", lambda: table18_ingest_throughput.run(n_batches=n(24))),
         ("table19", lambda: table19_serve_fusion.run(reps=n(40))),
+        ("table20", lambda: table20_overload.run(n_queries=n(600))),
         ("fig3", lambda: fig3_hyperparams.run(n_batches=n(20))),
     ]
 

@@ -1,0 +1,262 @@
+"""Table 20 — overload behavior: static vs query-adaptive serving plans.
+
+Open-loop overload sweep over (arrival rate x Zipf query skew): queries
+arrive on an absolute schedule at ``rate_factor x`` the server's
+measured full-effort closed-loop capacity, and the server answers them
+through the async runtime's per-flush :class:`QueryPlan` machinery.
+
+Two plan policies on identical workloads:
+
+  * **static** — every flush serves the full-effort plan (exactly the
+    pre-plan server). Past saturation the queue grows without bound, so
+    open-loop p99 enqueue-to-answer latency grows with the run length —
+    the classic latency blow-up.
+  * **adaptive** — the hysteretic degradation controller walks the
+    PlanSpace ladder under queue pressure (shrink rerank depth, then
+    nprobe, then shed with an explicit marker), trading Recall@10 for a
+    bounded queue.
+
+Reported per cell: p50/p99 answer latency, shed rate, degraded
+fraction, and Recall@10 (topic coverage vs the exact archive oracle,
+over non-shed answers — the recall price of staying up). The Pareto
+headline is ASSERTED at the >= 2x-saturating rate: adaptive p99 must be
+strictly below static p99, with the degradation machinery actually
+engaged (nonzero degraded fraction).
+
+``--smoke`` runs a short two-point sweep with the same assertion — the
+CI overload gate.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+
+DIM = 64
+TOPK = 10
+NPROBE = 8
+DEPTH = 16
+MAX_BATCH = 16
+N_INGEST_BATCHES = 24
+INGEST_BATCH = 256
+
+
+def _stream(seed: int = 0):
+    from repro.data.streams import StreamConfig, TopicStream
+
+    return TopicStream(StreamConfig(
+        "synthetic-drift", dim=DIM, n_topics=96, zipf_s=1.05, drift=0.03,
+        burstiness=0.05, noise=0.45, background_frac=0.10, seed=500 + seed))
+
+
+def _build(seed: int):
+    """One pre-ingested engine + host archive shared by every cell: the
+    sweep varies only the arrival process and the plan policy."""
+    import jax
+    import numpy as np
+
+    from benchmarks.common import DocArchive
+    from repro.configs.streaming_rag import paper_pipeline_config
+    from repro.engine.engine import Engine
+
+    cfg = paper_pipeline_config(dim=DIM, k=96, capacity=64,
+                                update_interval=256, alpha=0.1,
+                                store_depth=DEPTH)
+    stream = _stream(seed)
+    archive = DocArchive(DIM)
+    warm = [stream.next_batch(INGEST_BATCH) for _ in range(2)]
+    for b in warm:
+        archive.add(b)
+    engine = Engine(cfg, jax.random.key(seed),
+                    np.concatenate([b["embedding"] for b in warm]))
+    for b in warm:
+        engine.ingest(b["embedding"], b["doc_id"])
+    for _ in range(N_INGEST_BATCHES):
+        b = stream.next_batch(INGEST_BATCH)
+        archive.add(b)
+        engine.ingest(b["embedding"], b["doc_id"])
+    return cfg, engine, archive, stream
+
+
+def _server(cfg, engine, *, adaptive: bool):
+    from repro.serve.runtime import AsyncServer, ServerConfig
+
+    scfg = ServerConfig(max_batch=MAX_BATCH, max_wait_ms=0.0, topk=TOPK,
+                        two_stage=True, nprobe=NPROBE, adaptive=adaptive,
+                        max_queue_depth=2 * MAX_BATCH, recover_after=2)
+    # queries only during the timed phase: publishes are driven manually
+    return AsyncServer(cfg, scfg, engine=engine, publish_every=10**9)
+
+
+def _warm_plans(server):
+    """Compile every ladder bucket before timing (a first-flush compile
+    inside the measured window would charge XLA to the latency tail)."""
+    q = np.zeros((MAX_BATCH, DIM), np.float32)
+    for plan in server.plan_space.buckets:
+        server.engine.query_snapshot(server._snapshot, q, TOPK,
+                                     two_stage=True, plan=plan)
+
+
+def _capacity_qps(server, stream) -> float:
+    """Closed-loop full-effort throughput — the saturation point the
+    open-loop rate factors are anchored to. Queries are pre-generated
+    and the loop is untimed-warmed first, so only submit+flush (the
+    work the open-loop server actually does per batch) is measured."""
+    rounds = 12
+    qs = stream.queries(MAX_BATCH * (rounds + 2))["embedding"]
+
+    def closed_rounds(lo, hi):
+        n = 0
+        for r in range(lo, hi):
+            for q in qs[r * MAX_BATCH:(r + 1) * MAX_BATCH]:
+                server.submit(q)
+            n += len(server.flush())
+        return n
+
+    closed_rounds(0, 2)  # shape warmup, untimed
+    t0 = time.perf_counter()
+    n = closed_rounds(2, rounds + 2)
+    dt = time.perf_counter() - t0
+    server.drain()
+    return n / dt
+
+
+def _drive_open_loop(server, qs: np.ndarray, rate_qps: float):
+    """Submit ``qs`` on an absolute open-loop schedule at ``rate_qps``
+    and flush until every ticket is answered (backlog drained).
+
+    Flushes run only on FULL batches (the arrival count is a multiple of
+    ``max_batch``), so every engine call keeps the one warmed query
+    shape — ragged tail shapes would charge jit re-traces to the latency
+    tail of whichever policy saw a new (plan, shape) pair first.
+
+    Returns (answers, lateness_ms) where ``lateness_ms[ticket]`` is how
+    long the arrival waited to be *submitted* past its scheduled time
+    (the single-threaded driver can't submit mid-flush); cell latency =
+    lateness + enqueue-to-answer, i.e. schedule-to-answer — the number
+    an open-loop client actually experiences."""
+    n = len(qs)
+    assert n % MAX_BATCH == 0, "arrival count must be a multiple of the batch"
+    arrivals = np.arange(n) / rate_qps
+    lateness_ms = np.zeros(n)
+    answers: list[dict] = []
+    i = 0
+    t0 = time.perf_counter()
+    while len(answers) < n:
+        now = time.perf_counter() - t0
+        while i < n and arrivals[i] <= now:
+            server.submit(qs[i])  # fresh server: ticket == arrival index
+            lateness_ms[i] = (now - arrivals[i]) * 1e3
+            i += 1
+        if len(server._pending) >= MAX_BATCH or (i == n
+                                                 and server._pending):
+            answers += server.flush()
+        elif i < n:  # idle until the next scheduled arrival
+            time.sleep(min(max(arrivals[i] - now, 0.0), 0.005))
+    return answers, lateness_ms
+
+
+def _recall10(archive, qs: np.ndarray, answers: list[dict]) -> float:
+    """Topic-coverage Recall@10 vs the exact oracle (benchmarks/common
+    convention), over NON-SHED answers only — shed queries return the
+    explicit overload sentinel, and their rate is reported separately."""
+    arc = archive.materialize()
+    live = [a for a in answers if not a.get("shed")]
+    if not live:
+        return 0.0
+    q = np.stack([qs[a["ticket"]] for a in live])
+    oracle_ids, _ = arc.oracle_topk(q, TOPK)
+    recalls = []
+    for i, a in enumerate(live):
+        o_topics = {t for t in arc.T[oracle_ids[i]] if t >= 0}
+        got = [int(d) for d in a["doc_ids"] if 0 <= d < len(arc.T)]
+        r_topics = {arc.T[d] for d in got if arc.T[d] >= 0}
+        recalls.append(len(o_topics & r_topics) / max(len(o_topics), 1))
+    return float(np.mean(recalls))
+
+
+def _cell(cfg, engine, archive, *, adaptive: bool, rate_qps: float,
+          zipf_s: float, n_queries: int, seed: int) -> dict:
+    server = _server(cfg, engine, adaptive=adaptive)
+    try:
+        _warm_plans(server)
+        qs = _stream(seed + 7).queries(n_queries,
+                                       zipf_s=zipf_s)["embedding"]
+        answers, lateness_ms = _drive_open_loop(server, qs, rate_qps)
+        assert len(answers) == n_queries  # exactly once, shed included
+        lat = np.asarray([lateness_ms[a["ticket"]]
+                          + a["enqueue_to_answer_ms"] for a in answers])
+        shed = sum(1 for a in answers if a.get("shed"))
+        degraded = sum(1 for a in answers if a.get("degraded"))
+        return {
+            "table": "table20",
+            "variant": "adaptive" if adaptive else "static",
+            "zipf_s": zipf_s,
+            "rate_qps": round(rate_qps, 1),
+            "answered": n_queries,
+            "p50_ms": round(float(np.percentile(lat, 50)), 3),
+            "p99_ms": round(float(np.percentile(lat, 99)), 3),
+            "shed_rate": round(shed / n_queries, 4),
+            "degraded_frac": round(degraded / n_queries, 4),
+            "recall10": round(_recall10(archive, qs, answers), 4),
+        }
+    finally:
+        server.close()
+
+
+def run(n_queries: int = 600, seed: int = 0,
+        smoke: bool = False) -> list[dict]:
+    """Static-vs-adaptive Pareto over (rate factor x Zipf skew).
+
+    Also present when imported through ``benchmarks.run``: the
+    registered entry point maps ``n_batches``-style scaling onto
+    ``n_queries`` directly."""
+    factors = (0.6, 2.5) if smoke else (0.6, 1.2, 2.5)
+    zipfs = (1.4,) if smoke else (1.05, 1.5)
+    n_queries = max(MAX_BATCH, n_queries // MAX_BATCH * MAX_BATCH)
+    cfg, engine, archive, stream = _build(seed)
+
+    cal = _server(cfg, engine, adaptive=False)
+    try:
+        _warm_plans(cal)
+        capacity = _capacity_qps(cal, stream)
+    finally:
+        cal.close()
+
+    rows = []
+    for zipf_s in zipfs:
+        for factor in factors:
+            for adaptive in (False, True):
+                row = _cell(cfg, engine, archive, adaptive=adaptive,
+                            rate_qps=factor * capacity, zipf_s=zipf_s,
+                            n_queries=n_queries, seed=seed)
+                row["rate_factor"] = factor
+                row["capacity_qps"] = round(capacity, 1)
+                rows.append(row)
+
+    # acceptance: at the >= 2x-saturating rate the adaptive policy keeps
+    # p99 strictly below static's blow-up, by actually degrading
+    top = max(factors)
+    for zipf_s in zipfs:
+        cell = {r["variant"]: r for r in rows
+                if r["rate_factor"] == top and r["zipf_s"] == zipf_s}
+        a, s = cell["adaptive"], cell["static"]
+        a["p99_vs_static"] = round(a["p99_ms"] / s["p99_ms"], 4)
+        assert a["p99_ms"] < s["p99_ms"], (a["p99_ms"], s["p99_ms"])
+        assert a["degraded_frac"] > 0.0, a
+        # the recall price of degradation is REPORTED, not hidden: the
+        # adaptive cell must carry a recall number for the Pareto read
+        assert "recall10" in a and "recall10" in s
+    return rows
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "--smoke":
+        out = run(n_queries=480, smoke=True)
+    else:
+        out = run()
+    for row in out:
+        print("ROW " + json.dumps(row), flush=True)
+    print("TABLE20-OVERLOAD-OK", flush=True)

@@ -155,9 +155,11 @@ def ingest_stream(cfg: PipelineConfig, state: PipelineState,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("cfg", "k", "two_stage", "nprobe"))
+                   static_argnames=("cfg", "k", "two_stage", "nprobe",
+                                    "depth"))
 def query(cfg: PipelineConfig, state: PipelineState, q: jnp.ndarray,
-          k: int = 10, *, two_stage: bool = False, nprobe: int = 8):
+          k: int = 10, *, two_stage: bool = False, nprobe: int = 8,
+          depth: int | None = None):
     """Retrieve top-k: (scores [Q,k], rows [Q,k], doc_ids [Q,k], clusters [Q,k]).
 
     two_stage=False — prototype-only: top-k over the prototype index; rows
@@ -166,12 +168,17 @@ def query(cfg: PipelineConfig, state: PipelineState, q: jnp.ndarray,
     two_stage=True — routed exact retrieval: the prototype index routes
     each query to its top-``nprobe`` clusters (stage 1), whose document
     ring buffers are gathered and exact-reranked by the fused Pallas
-    kernel (stage 2). rows are flat store positions cluster*depth + slot,
-    doc_ids real stored documents; dead entries are -1.
+    kernel (stage 2). rows are flat store positions
+    cluster*store_depth + slot, doc_ids real stored documents; dead
+    entries are -1. ``depth`` clips the rerank to the first ``depth``
+    ring slots per routed cluster (a QueryPlan's effort; None = full
+    ring). (nprobe, depth) are jit-static — pass bucketed plans
+    (``engine.plan.PlanSpace``) to bound the compiled-variant count.
     """
     from repro.engine.engine import query_impl
 
-    return query_impl(cfg, state, q, k, two_stage=two_stage, nprobe=nprobe)
+    return query_impl(cfg, state, q, k, two_stage=two_stage, nprobe=nprobe,
+                      depth=depth)
 
 
 def state_memory_bytes(cfg: PipelineConfig) -> int:

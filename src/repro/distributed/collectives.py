@@ -131,7 +131,7 @@ def distributed_mips_topk(q, index_rows, valid, k: int, axis: str = "model"):
 
 def distributed_rerank_topk(qn, embs, live, ids, routes, k: int,
                             axis: str = "model", use_pallas: bool | None = None,
-                            scales=None):
+                            scales=None, depth: int | None = None):
     """Distributed two-stage rerank: doc-store rings cluster-sharded over
     ``axis`` (inside shard_map). Generalizes ``distributed_mips_topk`` to
     routed ring gathers.
@@ -151,11 +151,18 @@ def distributed_rerank_topk(qn, embs, live, ids, routes, k: int,
     lowest-position tie-break — is bit-identical to a single device
     reranking the full store.
 
+    ``depth`` (a QueryPlan's rerank depth) clips each shard's rings to
+    their first ``depth`` slots before the local kernel — the same
+    prefix slice as ``stages.rerank``, so the merged order still equals
+    the single-device plan query. None = full rings.
+
     Returns (scores [Q,k] desc, pos [Q,k] = j*depth+slot into the route
     list, doc_ids [Q,k]); dead entries are -1.
     """
+    from repro.engine.stages import slice_rings
     from repro.kernels.rerank.ops import rerank_topk
 
+    embs, live, scales = slice_rings(embs, live, scales, depth)
     kl, depth = embs.shape[0], embs.shape[1]
     P = routes.shape[1]
     off = jax.lax.axis_index(axis) * kl
@@ -201,7 +208,8 @@ def _merge_local_rerank(scores, pos, local_routes, ids, k: int, P: int,
 
 def distributed_serve_topk(qr, qn, vectors, valid, route_labels, embs, live,
                            ids, k: int, nprobe: int, axis: str = "model",
-                           use_pallas: bool | None = None, scales=None):
+                           use_pallas: bool | None = None, scales=None,
+                           depth: int | None = None):
     """Distributed FUSED serve path (inside shard_map): every shard runs
     the one-program route + gather + dequant-rerank + top-k kernel over
     its cluster slice, then the shards merge exactly like
@@ -221,11 +229,18 @@ def distributed_serve_topk(qr, qn, vectors, valid, route_labels, embs, live,
     route list is recovered with a ``pmax`` over the per-shard partials
     (each position is live on exactly the owning shard).
 
+    ``depth`` (a QueryPlan's rerank depth) clips each shard's rings to
+    their first ``depth`` slots before the fused kernel (None = full) —
+    parity with the single-device plan query is preserved because every
+    shard applies the same prefix slice.
+
     Returns (scores [Q,k] desc, pos [Q,k], doc_ids [Q,k],
     routes [Q,nprobe] GLOBAL cluster ids); dead entries are -1.
     """
+    from repro.engine.stages import slice_rings
     from repro.kernels.serve.ops import serve_topk
 
+    embs, live, scales = slice_rings(embs, live, scales, depth)
     kl, depth = embs.shape[0], embs.shape[1]
     off = jax.lax.axis_index(axis) * kl
     local_labels = jnp.where((route_labels >= off) & (route_labels < off + kl),

@@ -13,5 +13,9 @@
               reconciliation, the doc store cluster-sharded over the model
               axis, and distributed two-stage retrieval (replicated
               routing, per-shard rerank, global top-k merge).
+``plan``    — runtime retrieval effort: ``QueryPlan`` (nprobe, rerank
+              depth, shed) and the fixed ``PlanSpace`` bucket ladder the
+              serving layer degrades along under load.
 """
 from repro.engine.engine import Engine  # noqa: F401
+from repro.engine.plan import PlanSpace, QueryPlan  # noqa: F401

@@ -113,49 +113,70 @@ def ingest_impl(cfg: "pipeline.PipelineConfig", state: "pipeline.PipelineState",
 
 
 def query_impl(cfg: "pipeline.PipelineConfig", state: "pipeline.PipelineState",
-               q: jnp.ndarray, k: int, *, two_stage: bool, nprobe: int):
-    """Retrieve top-k: (scores [Q,k], rows [Q,k], doc_ids [Q,k], clusters)."""
+               q: jnp.ndarray, k: int, *, two_stage: bool, nprobe: int,
+               depth: int | None = None):
+    """Retrieve top-k: (scores [Q,k], rows [Q,k], doc_ids [Q,k], clusters).
+
+    ``depth`` is a QueryPlan's rerank depth (ring slots read per routed
+    cluster); None or >= store_depth is full effort and runs the exact
+    pre-plan program. Callers pass *bucketed* plans (``engine.plan``) —
+    each distinct (nprobe, depth) is one compiled variant."""
     from repro.core import index as index_lib
 
     if not two_stage:
         scores, rows, ids = index_lib.search(cfg.index, state.index, q, k)
         return scores, rows, ids, state.route_labels[rows]
 
-    depth = cfg.store_depth
-    assert depth > 0, "two_stage requires store_depth > 0"
-    assert k <= nprobe * depth, "k must be <= nprobe * store_depth"
+    store_depth = cfg.store_depth
+    depth_eff = store_depth if depth is None else min(depth, store_depth)
+    assert store_depth > 0, "two_stage requires store_depth > 0"
+    assert k <= nprobe * depth_eff, "k must be <= nprobe * plan depth"
     # the ONE two-stage query implementation: fused route + gather +
     # dequant-rerank + top-k (staged route -> rerank when use_pallas=False)
     scores, pos, routes = stages.serve_topk(
         cfg.index, state.index, state.route_labels, state.store, q, k,
-        nprobe, cfg.clus.use_pallas)
-    return stages.decode_rerank(state.store.ids, routes, scores, pos, depth,
-                                nprobe)
+        nprobe, cfg.clus.use_pallas, depth=depth_eff)
+    return stages.decode_rerank(state.store.ids, routes, scores, pos,
+                                depth_eff, nprobe, store_depth=store_depth)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("cfg", "k", "two_stage", "nprobe"))
+                   static_argnames=("cfg", "k", "two_stage", "nprobe",
+                                    "depth"))
 def snapshot_query_impl(cfg: "pipeline.PipelineConfig", index, route_labels,
                         store, q: jnp.ndarray, k: int, *, two_stage: bool,
-                        nprobe: int):
+                        nprobe: int, depth: int | None = None):
     """``query_impl`` over a published ServingSnapshot's leaves (the same
-    stage composition, reading snapshot state instead of live state)."""
+    stage composition, reading snapshot state instead of live state).
+    ``depth`` is the (bucketed) QueryPlan rerank depth; None = full."""
     if not two_stage:
         scores, rows, ids = index_lib.search(cfg.index, index, q, k)
         return scores, rows, ids, route_labels[rows]
-    depth = cfg.store_depth
-    assert depth > 0, "two_stage requires store_depth > 0"
-    assert k <= nprobe * depth, "k must be <= nprobe * store_depth"
+    store_depth = cfg.store_depth
+    depth_eff = store_depth if depth is None else min(depth, store_depth)
+    assert store_depth > 0, "two_stage requires store_depth > 0"
+    assert k <= nprobe * depth_eff, "k must be <= nprobe * plan depth"
     scores, pos, routes = stages.serve_topk(
         cfg.index, index, route_labels, store, q, k, nprobe,
-        cfg.clus.use_pallas)
-    return stages.decode_rerank(store.ids, routes, scores, pos, depth, nprobe)
+        cfg.clus.use_pallas, depth=depth_eff)
+    return stages.decode_rerank(store.ids, routes, scores, pos, depth_eff,
+                                nprobe, store_depth=store_depth)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _pipeline_counters_jit(cfg: "pipeline.PipelineConfig",
                            state: "pipeline.PipelineState"):
     return stages.pipeline_counters(cfg, state)
+
+
+def _resolve_plan(plan, nprobe: int) -> tuple[int, int | None]:
+    """Unpack a QueryPlan into the engine's static (nprobe, depth) args.
+    A shed plan must never reach an engine — the serving layer answers
+    shed flushes directly with an explicit marker."""
+    if plan is None:
+        return nprobe, None
+    assert not plan.shed, "shed plans are answered by the serving layer"
+    return plan.nprobe, plan.depth
 
 
 class Engine:
@@ -178,9 +199,16 @@ class Engine:
         return info
 
     def query(self, q: jnp.ndarray, k: int = 10, *, two_stage: bool = False,
-              nprobe: int = 8):
+              nprobe: int = 8, plan=None):
+        """Retrieve top-k. ``plan`` (an ``engine.plan.QueryPlan``)
+        overrides (nprobe, rerank depth) for this call; callers hand in
+        *bucketed* plans so the compiled-variant count stays bounded.
+        Shed plans never reach the engine (the serving layer answers
+        them directly)."""
+        nprobe, depth = _resolve_plan(plan, nprobe)
         return pipeline.query(self.cfg, self.state, jnp.asarray(q),
-                              k, two_stage=two_stage, nprobe=nprobe)
+                              k, two_stage=two_stage, nprobe=nprobe,
+                              depth=depth)
 
     def publish(self) -> ServingSnapshot:
         """Copy the queryable sub-state into an immutable serving snapshot.
@@ -202,12 +230,13 @@ class Engine:
 
     def query_snapshot(self, snap: ServingSnapshot, q: jnp.ndarray,
                        k: int = 10, *, two_stage: bool = False,
-                       nprobe: int = 8):
+                       nprobe: int = 8, plan=None):
         """Same contract as ``query``, answered from a published snapshot."""
+        nprobe, depth = _resolve_plan(plan, nprobe)
         return snapshot_query_impl(
             self.cfg, snap.index, snap.route_labels, snap.store,
             jnp.asarray(q, jnp.float32), k, two_stage=two_stage,
-            nprobe=nprobe)
+            nprobe=nprobe, depth=depth)
 
     def index_size(self) -> int:
         return int(index_lib.size(self.state.index))

@@ -1,0 +1,112 @@
+"""Runtime query plans: per-flush retrieval effort as a first-class value.
+
+Retrieval effort used to be a config-time constant — every query ran the
+same (nprobe, rerank depth) forever, so a traffic burst could only blow
+up p99. A :class:`QueryPlan` lifts that effort into a runtime value the
+serving layer chooses per flush: how many clusters the prototype index
+routes (``nprobe``), how deep into each routed ring the rerank reads
+(``depth``), and whether the flush is shed outright (``shed`` — answered
+immediately with an explicit marker, never touching the engine).
+
+Because (nprobe, depth) are jit-static — they shape the route list and
+the ring gather — every distinct plan is one compiled program. The
+:class:`PlanSpace` bounds that: it enumerates a small fixed ladder of
+effort buckets (full effort first, then depth halvings, then nprobe
+halvings, then shed), every bucket honoring ``k <= nprobe * depth``, and
+``bucket()`` rounds any requested plan *up* onto the ladder. Engines
+only ever see bucket plans, so the steady-state compile count equals the
+number of buckets — never the number of distinct requested plans — and
+the tune cache / trace counters key on the same ``np{n}xd{d}`` tag.
+
+The ladder order IS the degradation policy (shrink depth, then nprobe,
+then shed): depth halvings cut the dominant rerank-gather bytes while
+routing stays intact, nprobe halvings start dropping whole clusters (a
+sharper recall cliff), and shedding is the explicit last resort. The
+serving runtime's hysteretic controller walks this ladder under queue
+pressure (``serve.executor.DegradationController``).
+
+Full effort (``PlanSpace.full``) is exactly the pre-plan configuration:
+``depth == store_depth`` takes the no-slice code path everywhere, so a
+full-effort plan is bit-identical to a plan-free query (pinned by
+``tests/test_query_plan.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryPlan:
+    """One flush's retrieval effort: route ``nprobe`` clusters, rerank
+    the first ``depth`` ring slots of each (an age-uniform subset once
+    the ring wraps), or ``shed`` the flush."""
+
+    nprobe: int
+    depth: int
+    shed: bool = False
+
+    @property
+    def key(self) -> str:
+        """Bucket tag (``np{n}xd{d}``) — the tune-cache / trace-counter
+        variant key for this plan's compiled serve program."""
+        return f"np{self.nprobe}xd{self.depth}"
+
+
+class PlanSpace:
+    """The fixed, ordered degradation ladder of effort buckets.
+
+    ``ladder[0]`` is full effort; each subsequent level halves depth
+    until ``min_depth`` (or the ``k`` constraint) stops it, then halves
+    nprobe until ``min_nprobe``, and the final level sheds. Every
+    non-shed level satisfies ``k <= nprobe * depth`` by construction, so
+    any ladder plan is a valid engine call.
+    """
+
+    def __init__(self, *, nprobe: int, depth: int, k: int,
+                 min_depth: int = 1, min_nprobe: int = 1):
+        assert depth > 0 and nprobe > 0 and k > 0
+        assert k <= nprobe * depth, "k must be <= nprobe * depth"
+        self.k = k
+        ladder = [QueryPlan(nprobe, depth)]
+        d = depth
+        while d // 2 >= min_depth and nprobe * (d // 2) >= k:
+            d //= 2
+            ladder.append(QueryPlan(nprobe, d))
+        p = nprobe
+        while p // 2 >= min_nprobe and (p // 2) * d >= k:
+            p //= 2
+            ladder.append(QueryPlan(p, d))
+        ladder.append(QueryPlan(p, d, shed=True))
+        self.ladder: tuple[QueryPlan, ...] = tuple(ladder)
+
+    @property
+    def full(self) -> QueryPlan:
+        return self.ladder[0]
+
+    @property
+    def buckets(self) -> tuple[QueryPlan, ...]:
+        """The compiled-variant set: every non-shed ladder level."""
+        return tuple(pl for pl in self.ladder if not pl.shed)
+
+    def bucket(self, plan: QueryPlan) -> QueryPlan:
+        """Round an arbitrary requested plan *up* onto the ladder.
+
+        Returns the lowest-effort ladder level that still dominates the
+        request in both dimensions (nprobe and depth) — effort is never
+        silently reduced, and requests above full effort clamp to full.
+        Shed requests map to the shed level.
+        """
+        if plan.shed:
+            return self.ladder[-1]
+        out = self.full
+        for pl in self.buckets:
+            if pl.nprobe >= plan.nprobe and pl.depth >= plan.depth:
+                out = pl
+        return out
+
+    def level(self, plan: QueryPlan) -> int:
+        """Degradation level of a ladder plan (0 = full effort)."""
+        return self.ladder.index(plan)
+
+    def describe(self) -> list[str]:
+        return [("shed" if pl.shed else pl.key) for pl in self.ladder]

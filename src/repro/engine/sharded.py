@@ -348,7 +348,7 @@ class ShardedEngine:
     def _abstract_index(self):
         return index_lib.init(self.cfg.index)
 
-    def _build_rerank(self, k: int, nprobe: int):
+    def _build_rerank(self, k: int, nprobe: int, depth: int | None):
         cfg = self.cfg
         model_axis = self.model_axis
         use_pallas = cfg.clus.use_pallas
@@ -359,7 +359,7 @@ class ShardedEngine:
             return distributed_rerank_topk(
                 qn, store.embs, docstore.live_mask(store), store.ids,
                 routes, k, model_axis, use_pallas=use_pallas,
-                scales=scales)
+                scales=scales, depth=depth)
 
         def run(qn, routes, store):
             fn = compat_shard_map(
@@ -371,12 +371,14 @@ class ShardedEngine:
 
         return jax.jit(run)
 
-    def _build_serve(self, k: int, nprobe: int):
+    def _build_serve(self, k: int, nprobe: int, depth: int | None):
         """Fused serve path over the cluster-sharded snapshot store: the
         (small) prototype index rides in replicated, every shard runs the
         one-program route + gather + dequant-rerank + top-k over its
         cluster slice, and the shards merge exactly like the staged
-        ``_build_rerank`` (which stays as the pinned staged reference)."""
+        ``_build_rerank`` (which stays as the pinned staged reference).
+        ``depth`` is the (bucketed) QueryPlan rerank depth; one compiled
+        program per (k, nprobe, depth)."""
         cfg = self.cfg
         model_axis = self.model_axis
         use_pallas = cfg.clus.use_pallas
@@ -387,7 +389,8 @@ class ShardedEngine:
             return distributed_serve_topk(
                 qr, qn, vectors, valid, route_labels, store.embs,
                 docstore.live_mask(store), store.ids, k, nprobe,
-                model_axis, use_pallas=use_pallas, scales=scales)
+                model_axis, use_pallas=use_pallas, scales=scales,
+                depth=depth)
 
         def run(qr, qn, vectors, valid, route_labels, store):
             fn = compat_shard_map(
@@ -528,16 +531,16 @@ class ShardedEngine:
         return self.reconcile()
 
     def query(self, q, k: int = 10, *, two_stage: bool = False,
-              nprobe: int = 8):
+              nprobe: int = 8, plan=None):
         """Same contract as ``pipeline.query`` over the latest snapshot."""
         if self.serving is None:
             self.reconcile()
         return self.query_snapshot(self.serving, q, k, two_stage=two_stage,
-                                   nprobe=nprobe)
+                                   nprobe=nprobe, plan=plan)
 
     def query_snapshot(self, snap: ServingSnapshot, q, k: int = 10, *,
                        two_stage: bool = False, nprobe: int = 8,
-                       staged: bool = False):
+                       plan=None, staged: bool = False):
         """Answer from an explicitly published snapshot (the async runtime
         pins the snapshot it hands out per batch, so in-flight queries are
         isolated from concurrent reconciles).
@@ -545,48 +548,63 @@ class ShardedEngine:
         Two-stage queries run the FUSED serve path; ``staged=True`` forces
         the original route-program + rerank-program composition — kept as
         the pinned reference the fused path is ids-identical to (parity
-        tests and the staged-vs-fused benchmark drive it)."""
+        tests and the staged-vs-fused benchmark drive it). ``plan`` (an
+        ``engine.plan.QueryPlan``, pre-bucketed) overrides (nprobe, rerank
+        depth) for this call on both paths; shards all apply the same
+        ring-prefix clip, so plan queries stay parity with single-device.
+        """
+        from repro.engine.engine import _resolve_plan
+
         q = jnp.asarray(q, jnp.float32)
         cfg = self.cfg
         if not two_stage:
             scores, rows, ids = index_lib.search(cfg.index, snap.index, q, k)
             return scores, rows, ids, snap.route_labels[rows]
 
-        depth = cfg.store_depth
-        assert depth > 0, "two_stage requires store_depth > 0"
-        assert k <= nprobe * depth, "k must be <= nprobe * store_depth"
+        nprobe, depth = _resolve_plan(plan, nprobe)
+        store_depth = cfg.store_depth
+        depth_eff = (store_depth if depth is None
+                     else min(depth, store_depth))
+        assert store_depth > 0, "two_stage requires store_depth > 0"
+        assert k <= nprobe * depth_eff, "k must be <= nprobe * plan depth"
         if staged:
             routes = stages.route(cfg.index, snap.index, snap.route_labels,
                                   q, nprobe)
             qn = l2_normalize(q)
             if self.model_axis is None:
                 scores, pos = stages.rerank(snap.store, qn, routes, k,
-                                            cfg.clus.use_pallas)
+                                            cfg.clus.use_pallas,
+                                            depth=depth_eff)
                 return stages.decode_rerank(snap.store.ids, routes, scores,
-                                            pos, depth, nprobe)
-            key = (k, nprobe)
+                                            pos, depth_eff, nprobe,
+                                            store_depth=store_depth)
+            key = (k, nprobe, depth_eff)
             if key not in self._rerank_fns:
-                self._rerank_fns[key] = self._build_rerank(k, nprobe)
+                self._rerank_fns[key] = self._build_rerank(k, nprobe,
+                                                           depth_eff)
             scores, pos, doc_ids = self._rerank_fns[key](qn, routes,
                                                          snap.store)
-            return stages.decode_rerank(None, routes, scores, pos, depth,
-                                        nprobe, doc_ids=doc_ids)
+            return stages.decode_rerank(None, routes, scores, pos, depth_eff,
+                                        nprobe, doc_ids=doc_ids,
+                                        store_depth=store_depth)
         if self.model_axis is None:
             scores, pos, routes = stages.serve_topk(
                 cfg.index, snap.index, snap.route_labels, snap.store, q, k,
-                nprobe, cfg.clus.use_pallas)
+                nprobe, cfg.clus.use_pallas, depth=depth_eff)
             return stages.decode_rerank(snap.store.ids, routes, scores, pos,
-                                        depth, nprobe)
+                                        depth_eff, nprobe,
+                                        store_depth=store_depth)
         qn = l2_normalize(q)
         qr = qn if cfg.index.normalize else q
-        key = (k, nprobe)
+        key = (k, nprobe, depth_eff)
         if key not in self._serve_fns:
-            self._serve_fns[key] = self._build_serve(k, nprobe)
+            self._serve_fns[key] = self._build_serve(k, nprobe, depth_eff)
         scores, pos, doc_ids, routes = self._serve_fns[key](
             qr, qn, snap.index.vectors, snap.index.valid, snap.route_labels,
             snap.store)
-        return stages.decode_rerank(None, routes, scores, pos, depth, nprobe,
-                                    doc_ids=doc_ids)
+        return stages.decode_rerank(None, routes, scores, pos, depth_eff,
+                                    nprobe, doc_ids=doc_ids,
+                                    store_depth=store_depth)
 
     # ------------------------------------------------------------ accounting
     def device_counters(self) -> dict:

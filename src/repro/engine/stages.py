@@ -322,8 +322,26 @@ def route(index_cfg: index_lib.IndexConfig, index, route_labels,
     return jnp.where((sc1 > NEG_INF / 2) & (labels >= 0), labels, -1)
 
 
+def slice_rings(embs, live, scales, depth: int | None):
+    """Clip ring buffers to a plan's rerank ``depth``: the kernel gathers
+    only the first ``depth`` slots of each routed ring, cutting the
+    dominant stage-2 HBM bytes proportionally. Rings wrap (slot =
+    ptr % depth), so the prefix is an age-uniform subset of each
+    cluster's docs — the recall cost is graceful, not systematically
+    stale (and a per-cluster newest-k gather would itself cost the full
+    HBM pass the shrunken plan exists to avoid).
+
+    ``depth >= store depth`` (or None) is the full-effort identity — the
+    arrays pass through untouched, so a full-effort plan compiles and
+    executes the exact pre-plan program."""
+    if depth is None or depth >= embs.shape[1]:
+        return embs, live, scales
+    return (embs[:, :depth], live[:, :depth],
+            None if scales is None else scales[:, :depth])
+
+
 def rerank(store, qn: jnp.ndarray, routes: jnp.ndarray, k: int,
-           use_pallas: bool | None):
+           use_pallas: bool | None, depth: int | None = None):
     """Stage 2: gather the routed ring buffers, exact cosine rerank.
 
     int8 stores hand the kernel their per-slot scales; dequantization
@@ -331,16 +349,21 @@ def rerank(store, qn: jnp.ndarray, routes: jnp.ndarray, k: int,
     dtype is the single source of truth, so every composition of this
     stage — single-device, snapshot, sharded — picks the right path).
 
+    ``depth`` (a QueryPlan's rerank depth) clips each routed ring to its
+    first ``depth`` slots before the kernel; None = full ring.
+
     Returns (scores [Q,k] desc, pos [Q,k] = j*depth+slot into the route
     list, -1 for dead entries)."""
     scales = store.scales if store.embs.dtype == jnp.int8 else None
-    return rerank_topk(qn, store.embs, docstore.live_mask(store), routes, k,
+    embs, live, scales = slice_rings(store.embs, docstore.live_mask(store),
+                                      scales, depth)
+    return rerank_topk(qn, embs, live, routes, k,
                        scales=scales, use_pallas=use_pallas)
 
 
 def serve_topk(index_cfg: index_lib.IndexConfig, index, route_labels, store,
                q: jnp.ndarray, k: int, nprobe: int,
-               use_pallas: bool | None):
+               use_pallas: bool | None, depth: int | None = None):
     """Stages 1+2 fused: ONE device program routes each query through the
     prototype index (running top-``nprobe``, no [Q, cap] score matrix in
     HBM), DMAs only the routed ring tiles, dequant-reranks them with fp32
@@ -356,25 +379,38 @@ def serve_topk(index_cfg: index_lib.IndexConfig, index, route_labels, store,
     mips -> label-map -> rerank reference composition, so ``route`` +
     ``rerank`` stay the pinned oracle.
 
+    ``depth`` (a QueryPlan's rerank depth) clips each routed ring to its
+    first ``depth`` slots before the kernel; None = full ring. The
+    (nprobe, depth) pair is the plan bucket the dispatcher keys its tune
+    cache and trace counters by.
+
     Returns (scores [Q,k] desc, pos [Q,k] = j*depth+slot into the route
     list, routes [Q,nprobe] cluster ids; -1 for dead entries everywhere).
     """
     qn = l2_normalize(q)
     qr = qn if index_cfg.normalize else q.astype(jnp.float32)
     scales = store.scales if store.embs.dtype == jnp.int8 else None
+    embs, live, scales = slice_rings(store.embs, docstore.live_mask(store),
+                                      scales, depth)
     return serve_topk_op(qr, qn, index.vectors, index.valid, route_labels,
-                         store.embs, docstore.live_mask(store), k, nprobe,
+                         embs, live, k, nprobe,
                          scales=scales, use_pallas=use_pallas)
 
 
 def decode_rerank(store_ids, routes, scores, pos, depth: int, nprobe: int,
-                  doc_ids=None):
+                  doc_ids=None, store_depth: int | None = None):
     """Resolve rerank positions into (scores, rows, doc_ids, clusters).
 
-    rows are flat store positions cluster*depth + slot; dead entries -1.
-    ``doc_ids`` may be passed pre-resolved (the distributed rerank looks
-    them up shard-locally before the gather, when the rings are still
+    ``depth`` is the rerank depth ``pos`` was encoded with (a QueryPlan
+    may clip it below the store's ring depth); ``store_depth`` is the
+    full ring depth flat store rows are addressed in (defaults to
+    ``depth`` — the full-effort case). rows are flat store positions
+    cluster*store_depth + slot; dead entries -1. ``doc_ids`` may be
+    passed pre-resolved (the distributed rerank looks them up
+    shard-locally before the gather, when the rings are still
     addressable); otherwise they are read from ``store_ids``."""
+    if store_depth is None:
+        store_depth = depth
     dead = pos < 0
     j = jnp.clip(pos // depth, 0, nprobe - 1)
     slot = jnp.clip(pos % depth, 0, depth - 1)
@@ -382,5 +418,5 @@ def decode_rerank(store_ids, routes, scores, pos, depth: int, nprobe: int,
     cluster = jnp.where(dead, -1, cluster)
     if doc_ids is None:
         doc_ids = jnp.where(dead, -1, store_ids[jnp.clip(cluster, 0), slot])
-    rows = jnp.where(dead, -1, jnp.clip(cluster, 0) * depth + slot)
+    rows = jnp.where(dead, -1, jnp.clip(cluster, 0) * store_depth + slot)
     return scores, rows, doc_ids, cluster

@@ -45,15 +45,21 @@ def serve_topk(
     if use_pallas is None:
         use_pallas = use_pallas_default()
     # trace-time only (this wrapper runs Python once per jit trace):
-    # counts (re)compilations per dispatch path, free at execution time
-    obs.count_kernel_trace("serve", "pallas" if use_pallas else "ref")
+    # counts (re)compilations per dispatch path, free at execution time.
+    # (nprobe, depth) IS the plan bucket — callers hand in bucketed
+    # QueryPlans — so the per-variant counter and the tune-cache lookup
+    # below key compiled variants by effort bucket, not just tile shape.
+    variant = f"np{nprobe}xd{depth}"
+    obs.count_kernel_trace("serve", "pallas" if use_pallas else "ref",
+                           variant=variant)
     if use_pallas:
         from repro.kernels.serve.serve import serve_topk_pallas
 
-        # autotuned (bq, bk, bd) tiles, if the cache has a winner for
-        # this platform/dtype — also a trace-time-only lookup
+        # autotuned (bq, bk, bd) tiles: a plan-bucket-specific winner
+        # beats the shared platform/dtype one — also trace-time-only
         tile = tuning.lookup(
-            "serve", "int8" if embs.dtype == jnp.int8 else "fp32")
+            "serve", "int8" if embs.dtype == jnp.int8 else "fp32",
+            variant=variant)
         return serve_topk_pallas(qr, qn, vectors, valid, route_labels,
                                  embs, live, k, nprobe, scales, **tile)
     return serve_topk_ref(qr, qn, vectors, valid, route_labels, embs,

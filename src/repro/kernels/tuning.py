@@ -23,13 +23,18 @@ winners for several backends)::
 The default location is ``tune_cache.json`` next to this module (so a
 tuned checkout serves tuned); ``REPRO_TUNE_CACHE`` overrides the path
 (CI smoke and tests point it at a temp file). Entries are keyed by
-(kernel, dtype) only — a winner tuned at one shape applies to every
-shape of that kernel/dtype on the platform, which matches how the
-serving engine uses fixed paper-default shapes per deployment.
+(kernel, dtype), optionally refined by a plan-bucket ``variant`` (the
+serve dispatcher passes its QueryPlan bucket tag ``np{n}xd{d}``): a
+``"serve/int8/np8xd4"`` entry wins for that bucket, with
+``"serve/int8"`` as the shared fallback — a winner tuned at one shape
+applies to every shape of that kernel/dtype/bucket on the platform,
+which matches how the serving engine uses a fixed plan-bucket ladder
+per deployment.
 
 ``applied`` records every lookup that actually reached a dispatcher
-(key ``platform/kernel/dtype`` -> tile dict), so tests and the autotune
-smoke can assert the cache was *consumed*, not merely written.
+(key ``platform/kernel/dtype[/variant]`` -> tile dict, under the key
+that matched), so tests and the autotune smoke can assert the cache was
+*consumed*, not merely written.
 """
 from __future__ import annotations
 
@@ -76,33 +81,47 @@ def reload() -> None:
     _memo.clear()
 
 
-def lookup(kernel: str, dtype: str) -> dict:
-    """Tile overrides for (platform, kernel, dtype) — ``{}`` when untuned.
+def lookup(kernel: str, dtype: str, variant: str | None = None) -> dict:
+    """Tile overrides for (platform, kernel, dtype[, variant]) — ``{}``
+    when untuned.
 
-    Called by ops dispatchers at TRACE time only. Unknown keys are
-    filtered against ``TUNABLE_KEYS`` so a stale cache file can never
-    crash a dispatcher; a hit is recorded in :data:`applied`.
+    ``variant`` is a plan-bucket tag (``np{n}xd{d}``): a bucket-specific
+    entry wins over the shared ``kernel/dtype`` fallback, so different
+    effort buckets can carry different tilings. Called by ops
+    dispatchers at TRACE time only. Unknown keys are filtered against
+    ``TUNABLE_KEYS`` so a stale cache file can never crash a dispatcher;
+    a hit is recorded in :data:`applied` under the key that matched.
     """
-    entry = _load(cache_path()).get(platform(), {}).get(f"{kernel}/{dtype}")
+    plat_map = _load(cache_path()).get(platform(), {})
+    key = f"{kernel}/{dtype}"
+    entry = None
+    if variant is not None:
+        entry = plat_map.get(f"{key}/{variant}")
+        if entry:
+            key = f"{key}/{variant}"
+    if not entry:
+        entry = plat_map.get(f"{kernel}/{dtype}")
     if not entry:
         return {}
     keys = TUNABLE_KEYS.get(kernel, ())
     tile = {k: int(v) for k, v in entry.items() if k in keys}
     if tile:
-        applied[f"{platform()}/{kernel}/{dtype}"] = dict(tile)
+        applied[f"{platform()}/{key}"] = dict(tile)
     return tile
 
 
 def record(kernel: str, dtype: str, tile: dict, metrics: dict | None = None,
-           path: str | None = None) -> str:
+           path: str | None = None, variant: str | None = None) -> str:
     """Persist ``tile`` (+ benchmark ``metrics``) as the winner for
-    (current platform, kernel, dtype) and return the cache path written."""
+    (current platform, kernel, dtype[, variant]) and return the cache
+    path written."""
     path = path or cache_path()
     data = dict(_load(path))
     plat = dict(data.get(platform(), {}))
     entry = {k: int(v) for k, v in tile.items()}
     entry.update({k: float(v) for k, v in (metrics or {}).items()})
-    plat[f"{kernel}/{dtype}"] = entry
+    key = f"{kernel}/{dtype}" + (f"/{variant}" if variant else "")
+    plat[key] = entry
     data[platform()] = plat
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     with open(path, "w") as f:

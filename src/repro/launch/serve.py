@@ -15,6 +15,15 @@ thread ingests the stream and publishes snapshots every
 queries answer from the latest snapshot without waiting for ingest.
 Shutdown drains the pending queue completely — the launcher asserts
 ``queries answered == queries submitted``.
+
+``--adaptive`` (with ``--two-stage``) arms query-adaptive serving:
+every flush picks a (nprobe, rerank depth) QueryPlan from a fixed
+bucket ladder, degrading under queue pressure (past
+``--max-queue-depth``) from depth halvings (floored at ``--min-depth``)
+through nprobe halvings to explicit shedding, and recovering
+hysteretically. Shed queries are still answered — with sentinel results
+and ``shed``/``degraded`` markers — so the answered == submitted
+assertion holds under overload too.
 """
 from __future__ import annotations
 
@@ -53,6 +62,18 @@ def main():
     ap.add_argument("--async", dest="async_serve", action="store_true",
                     help="background ingest thread + snapshot publication "
                          "(queries never block on ingest)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="query-adaptive serving (needs --two-stage): "
+                         "under queue pressure each flush degrades along "
+                         "the plan ladder (depth -> nprobe -> shed) and "
+                         "recovers hysteretically; answers carry explicit "
+                         "degraded/shed markers")
+    ap.add_argument("--max-queue-depth", type=int, default=256,
+                    help="pending-query high watermark that escalates "
+                         "the degradation ladder one level per flush")
+    ap.add_argument("--min-depth", type=int, default=1,
+                    help="floor of the plan ladder's rerank-depth "
+                         "halvings (degradation never reranks shallower)")
     ap.add_argument("--reconcile-every", type=int, default=4,
                     help="ingest batches between snapshot publications "
                          "(sharded reconcile / async publish cadence)")
@@ -98,8 +119,13 @@ def main():
         dim=args.dim, k=k, capacity=100, update_interval=256, alpha=0.1,
         store_depth=args.store_depth if args.two_stage else 0,
         store_dtype=args.store_dtype)
+    assert not args.adaptive or args.two_stage, \
+        "--adaptive requires --two-stage (plans schedule rerank effort)"
     scfg = ServerConfig(max_batch=args.qps, topk=args.topk,
-                        two_stage=args.two_stage, nprobe=args.nprobe)
+                        two_stage=args.two_stage, nprobe=args.nprobe,
+                        adaptive=args.adaptive,
+                        max_queue_depth=args.max_queue_depth,
+                        min_depth=args.min_depth)
 
     engine = None
     if mesh_shape is not None:
@@ -144,6 +170,9 @@ def main():
     if args.async_serve:
         server.close()
     print(f"index size       : {server.engine.index_size()} prototypes")
+    if args.adaptive:
+        print(f"plan ladder      : {' -> '.join(server.plan_space.describe())}")
+        print(f"queries shed     : {server.stats['shed']}")
     if mesh_shape is not None:
         print(f"store bytes/dev  : {server.engine.store_bytes_per_device()}")
     reg, tr = obs.metrics(), obs.tracer()

@@ -76,16 +76,28 @@ def tracer() -> Tracer | None:
     return _tracer
 
 
-def count_kernel_trace(kernel: str, path: str) -> None:
+def count_kernel_trace(kernel: str, path: str,
+                       variant: str | None = None) -> None:
     """Count one jit trace of a kernel dispatch path (``ref``/``pallas``).
 
     Called from the ``kernels/*/ops.py`` dispatchers, which only execute
     Python at *trace* time — so this counts (re)compilations, a
-    compile-churn signal, and costs nothing at execution time."""
+    compile-churn signal, and costs nothing at execution time.
+
+    ``variant`` (a QueryPlan bucket tag like ``np8xd4``) additionally
+    increments a per-bucket counter
+    ``kernel_traces_total_{kernel}_{path}_{variant}`` — the regression
+    signal that steady-state compile count equals the number of plan
+    *buckets*, never the number of distinct requested plans. The
+    aggregate counter keeps its historical name either way."""
     reg = _registry
     if reg is not None:
         reg.counter(f"kernel_traces_total_{kernel}_{path}",
                     help="jit traces of this kernel dispatch path").inc()
+        if variant is not None:
+            reg.counter(f"kernel_traces_total_{kernel}_{path}_{variant}",
+                        help="jit traces of this kernel dispatch path, "
+                             "per plan bucket").inc()
 
 
 if os.environ.get("REPRO_OBS", "0") == "1":  # pragma: no cover - env hook

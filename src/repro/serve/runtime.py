@@ -27,6 +27,15 @@ doc lag between what was ingested and what the published snapshot
 serves, and every answer carries the ``snapshot_version`` it was served
 from — the latency/freshness trade ``benchmarks/table16_async_serving``
 measures.
+
+Retrieval effort is a per-flush :class:`~repro.engine.plan.QueryPlan`
+(two-stage serving): every flush picks (nprobe, rerank depth, shed)
+from a fixed :class:`~repro.engine.plan.PlanSpace` bucket ladder.
+``ServerConfig.adaptive`` arms the hysteretic degradation controller —
+under queue pressure it shrinks depth, then nprobe, then sheds, and
+every degraded answer says so explicitly (``degraded``/``shed`` keys +
+the plan served). The overload behavior is measured by
+``benchmarks/table20_overload``.
 """
 from __future__ import annotations
 
@@ -43,6 +52,8 @@ import numpy as np
 from repro import obs
 from repro.core import pipeline
 from repro.engine.engine import Engine
+from repro.engine.plan import PlanSpace
+from repro.serve.executor import DegradationController, PriorityDispatcher
 
 
 @dataclasses.dataclass
@@ -53,6 +64,18 @@ class ServerConfig:
     two_stage: bool = False    # routed two-stage retrieval (document store)
     nprobe: int = 8            # clusters routed per query when two_stage
     latency_window: int = 1024  # per-batch latencies kept for p50/p99
+    # ---- query-adaptive serving (two_stage only) ----
+    # adaptive=True arms the degradation controller: under queue pressure
+    # each flush walks the PlanSpace ladder (full -> shrink depth ->
+    # shrink nprobe -> shed) and answers carry an explicit ``degraded``/
+    # ``shed`` marker. adaptive=False always serves the full-effort plan
+    # (bit-identical to pre-plan serving).
+    adaptive: bool = False
+    max_queue_depth: int = 256  # pending queries (post-flush) that escalate
+    low_queue_depth: int | None = None  # recovery watermark (None = high//4)
+    recover_after: int = 4      # calm flushes required to step back up
+    min_depth: int = 1          # floor of the depth ladder
+    min_nprobe: int = 1         # floor of the nprobe ladder
 
 
 class QueryFrontend:
@@ -78,12 +101,33 @@ class QueryFrontend:
         self.cfg = cfg
         self.scfg = server_cfg
         self.embed_fn = embed_fn
+        # retrieval-effort plan machinery (two_stage only): the plan
+        # space's fixed bucket ladder bounds the compiled serve variants;
+        # adaptive serving walks it under queue pressure
+        self.plan_space: PlanSpace | None = None
+        self._full_plan = None
+        self._controller: DegradationController | None = None
+        if server_cfg.two_stage:
+            self.plan_space = PlanSpace(
+                nprobe=server_cfg.nprobe, depth=cfg.store_depth,
+                k=server_cfg.topk, min_depth=server_cfg.min_depth,
+                min_nprobe=server_cfg.min_nprobe)
+            self._full_plan = self.plan_space.full
+            if server_cfg.adaptive:
+                self._controller = DegradationController(
+                    self.plan_space, high=server_cfg.max_queue_depth,
+                    low=server_cfg.low_queue_depth,
+                    recover_after=server_cfg.recover_after)
+        else:
+            assert not server_cfg.adaptive, \
+                "adaptive serving requires two_stage=True"
         self._pending: collections.deque = collections.deque()
         self._lock = threading.Lock()
         self._next_ticket = 0
         self._lat_sum = 0.0
+        self._last_snapshot = None
         self.stats = {
-            "queries": 0, "docs": 0, "batches": 0,
+            "queries": 0, "docs": 0, "batches": 0, "shed": 0,
             "query_latency_ms":
                 collections.deque(maxlen=server_cfg.latency_window),
             # per-QUERY enqueue->answer latencies (vs per-batch dispatch
@@ -112,8 +156,24 @@ class QueryFrontend:
             age_ms = (time.perf_counter() - self._pending[0]["t"]) * 1e3
         return age_ms >= self.scfg.max_wait_ms
 
+    def _choose_plan(self, queue_depth: int):
+        """Per-flush effort policy: the degradation controller (adaptive)
+        or the fixed full-effort plan; None when plans don't apply
+        (prototype-only serving)."""
+        if self._controller is not None:
+            return self._controller.observe(queue_depth)
+        return self._full_plan
+
     def flush(self) -> list[dict]:
-        """Answer up to ``max_batch`` queued queries as one batch."""
+        """Answer up to ``max_batch`` queued queries as one batch.
+
+        The flush's :class:`~repro.engine.plan.QueryPlan` is chosen here
+        from the post-batch queue depth; a shed plan answers the whole
+        batch immediately with sentinel results and an explicit ``shed``
+        marker — every ticket is still answered exactly once. Answers
+        carry ``degraded`` (effort below full, including shed) and
+        ``plan`` so callers can audit what they got.
+        """
         with self._lock:
             if not self._pending:
                 return []
@@ -121,29 +181,47 @@ class QueryFrontend:
                      for _ in range(min(len(self._pending),
                                         self.scfg.max_batch))]
             depth = len(self._pending)
+        plan = self._choose_plan(depth)
+        degraded = plan is not None and (plan.shed
+                                         or plan != self._full_plan)
         # telemetry is fetched ONCE per batch; both are None when disabled
         # and every obs branch below is skipped — the hot path stays free
         reg, tr = obs.metrics(), obs.tracer()
-        fspan = (tr.span("flush", batch=len(batch), queue_depth=depth)
+        plan_args = ({} if plan is None else
+                     {"plan_nprobe": plan.nprobe, "plan_depth": plan.depth,
+                      "degraded": degraded, "shed": plan.shed})
+        fspan = (tr.span("flush", batch=len(batch), queue_depth=depth,
+                         **plan_args)
                  if tr is not None else None)
-        raw = [b["q"] for b in batch]
-        if self.embed_fn is not None:
-            if tr is not None:
-                with tr.span("embed", batch=len(batch)):
+        t0 = time.perf_counter()
+        if plan is not None and plan.shed:
+            # shed: never touches the embedder or the engine — the
+            # explicit overload answer, cheap by construction
+            k = self.scfg.topk
+            scores = np.full((len(batch), k), -np.inf, np.float32)
+            ids = np.full((len(batch), k), -1, np.int32)
+            labels = np.full((len(batch), k), -1, np.int32)
+        else:
+            raw = [b["q"] for b in batch]
+            if self.embed_fn is not None:
+                if tr is not None:
+                    with tr.span("embed", batch=len(batch)):
+                        q = self.embed_fn(raw)
+                else:
                     q = self.embed_fn(raw)
             else:
-                q = self.embed_fn(raw)
-        else:
-            q = np.stack(raw)
-        t0 = time.perf_counter()
-        scores, rows, ids, labels = self._query_batch(
-            np.asarray(q, np.float32))
-        # one host transfer per output (a per-row np.asarray in the loop
-        # below would dispatch a multi-device slice per query)
-        scores, ids, labels = (np.asarray(scores), np.asarray(ids),
-                               np.asarray(labels))
+                q = np.stack(raw)
+            scores, rows, ids, labels = self._query_batch(
+                np.asarray(q, np.float32), plan)
+            # one host transfer per output (a per-row np.asarray in the
+            # loop below would dispatch a multi-device slice per query)
+            scores, ids, labels = (np.asarray(scores), np.asarray(ids),
+                                   np.asarray(labels))
         lat = (time.perf_counter() - t0) * 1e3
         meta = self._batch_meta()
+        if plan is not None:
+            meta = {**meta, "degraded": degraded, "shed": plan.shed,
+                    "plan": {"nprobe": plan.nprobe, "depth": plan.depth}}
         out = []
         for i in range(len(batch)):
             out.append({
@@ -160,6 +238,8 @@ class QueryFrontend:
         with self._lock:
             self.stats["queries"] += len(batch)
             self.stats["batches"] += 1
+            if plan is not None and plan.shed:
+                self.stats["shed"] += len(batch)
             self.stats["query_latency_ms"].append(lat)
             for o in out:
                 self.stats["answer_latency_ms"].append(
@@ -175,16 +255,32 @@ class QueryFrontend:
             h = reg.histogram("serve_query_e2e_ms", unit="ms")
             for o in out:
                 h.observe(o["enqueue_to_answer_ms"])
+            if plan is not None:
+                # serve.plan telemetry: what effort was actually chosen
+                reg.histogram("serve_plan_nprobe", lo=0.5,
+                              hi=2048.0).observe(float(plan.nprobe))
+                reg.histogram("serve_plan_depth", lo=0.5,
+                              hi=2048.0).observe(float(plan.depth))
+                reg.gauge("serve_degradation_level").set(
+                    self._controller.level
+                    if self._controller is not None else 0)
+                if plan.shed:
+                    reg.counter("serve_shed_total").inc(len(batch))
         if tr is not None:
-            fspan.args.update(meta)
+            fspan.args.update(meta if plan is None else
+                              {k: v for k, v in meta.items() if k != "plan"})
             fspan.end()
             now = tr.now_us()
             # per-query submit->answer spans, correlated to the snapshot
-            # they were answered from via args (meta carries the version)
+            # they were answered from (and the plan that served them)
+            # via args
             for o in out:
                 e2e_us = o["enqueue_to_answer_ms"] * 1e3
                 tr.complete("query", now - e2e_us, e2e_us, cat="query",
-                            ticket=o["ticket"], **meta)
+                            ticket=o["ticket"],
+                            **{k: v for k, v in o.items()
+                               if k == "snapshot_version"},
+                            **plan_args)
         return out
 
     def drain(self) -> list[dict]:
@@ -229,7 +325,7 @@ class QueryFrontend:
         }
 
     # ------------------------------------------------------------- interface
-    def _query_batch(self, q: np.ndarray):
+    def _query_batch(self, q: np.ndarray, plan=None):
         raise NotImplementedError
 
     def _batch_meta(self) -> dict:
@@ -277,10 +373,14 @@ class AsyncServer(QueryFrontend):
         # and the query path: concurrently enqueueing two multi-device
         # programs from two threads can interleave their per-device
         # enqueue order and stall a collective behind the other program
-        # on some devices. Dispatch is asynchronous, so the lock is held
-        # only for enqueue time; execution still overlaps, and the query
-        # path never waits for ingest to *finish* — only for its enqueue.
-        self._dispatch_lock = threading.Lock()
+        # on some devices. Dispatch is asynchronous, so the section is
+        # held only for enqueue time; execution still overlaps, and the
+        # query path never waits for ingest to *finish* — only for its
+        # enqueue. The two-queue priority executor replaces the old
+        # plain lock: a queued query flush always dispatches before a
+        # queued ingest/publish dispatch, so under load queries never
+        # wait behind a backlog of ingest enqueues.
+        self._dispatch = PriorityDispatcher()
         self._closed = False
         self._stop_sent = False
         self._thread = threading.Thread(
@@ -304,7 +404,7 @@ class AsyncServer(QueryFrontend):
                 span = (tr.span("ingest.admit", cat="ingest",
                                 batch=int(np.asarray(ids).size))
                         if tr is not None else None)
-                with self._dispatch_lock:
+                with self._dispatch.ingest():
                     self.engine.ingest(x, ids)
                 if span is not None:  # dispatch time (execution is async)
                     span.end()
@@ -329,7 +429,7 @@ class AsyncServer(QueryFrontend):
         if prepare is not None:
             prepare()
         t0 = time.perf_counter()
-        with self._dispatch_lock:
+        with self._dispatch.ingest():  # publish defers to queued flushes
             snap = self.engine.publish()
         self._snapshot = snap        # atomic swap (single ref assignment)
         self._published_docs = docs
@@ -405,17 +505,22 @@ class AsyncServer(QueryFrontend):
             reg.counter("ingest_docs_enqueued_total").inc(live)
             reg.gauge("ingest_queue_depth").set(self._queue.qsize())
 
-    def _query_batch(self, q: np.ndarray):
+    def _query_batch(self, q: np.ndarray, plan=None):
         self._check()
         snap = self._snapshot        # pin ONE snapshot for the whole batch
         self._last_snapshot = snap
-        with self._dispatch_lock:    # enqueue-only; see __init__
+        with self._dispatch.query():  # enqueue-only, preempts ingest
             return self.engine.query_snapshot(
                 snap, q, self.scfg.topk, two_stage=self.scfg.two_stage,
-                nprobe=self.scfg.nprobe)
+                nprobe=self.scfg.nprobe, plan=plan)
 
     def _batch_meta(self) -> dict:
-        return {"snapshot_version": self._last_snapshot.version}
+        # shed flushes never call _query_batch, so fall back to the
+        # current snapshot: shed answers still carry the version they
+        # *would* have been served from
+        snap = (self._last_snapshot if self._last_snapshot is not None
+                else self._snapshot)
+        return {"snapshot_version": snap.version}
 
     def serve_round(self, stream_batch=None) -> list[dict]:
         """Event-loop-compatible turn: answer due queries FIRST (from the

@@ -72,10 +72,10 @@ class RAGServer(QueryFrontend):
             reg.counter("ingest_docs_enqueued_total").inc(len(doc_ids))
 
     # ----------------------------------------------------------------- query
-    def _query_batch(self, q: np.ndarray):
+    def _query_batch(self, q: np.ndarray, plan=None):
         return self.engine.query(q, self.scfg.topk,
                                  two_stage=self.scfg.two_stage,
-                                 nprobe=self.scfg.nprobe)
+                                 nprobe=self.scfg.nprobe, plan=plan)
 
     def serve_round(self, stream_batch=None) -> list[dict]:
         """One event-loop turn: ingest (if a stream batch arrived), then

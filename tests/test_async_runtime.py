@@ -21,6 +21,7 @@ import faulthandler
 import os
 import sys
 import threading
+import time
 
 import numpy as np
 import jax
@@ -133,6 +134,101 @@ def test_async_stress_exactly_once_from_published_snapshots():
     fresh = server.freshness_stats()
     assert fresh["docs_ingested"] == fresh["docs_published"]
     assert fresh["lag_docs"] == 0
+
+
+def test_async_adaptive_overload_sheds_exactly_once_with_markers():
+    """Threaded overload stress for query-adaptive serving: a flood of
+    submissions drives the degradation controller down the ladder to
+    shedding, concurrent ingest keeps the priority dispatcher busy, and
+    EVERY ticket — shed included — is answered exactly once with honest
+    markers (``degraded``/``shed``/``plan``/``snapshot_version``).
+    Non-shed answers are bit-reproducible from their recorded snapshot
+    under their answered plan; after the flood the controller recovers
+    to full effort hysteretically."""
+    from repro.engine.plan import QueryPlan
+
+    cfg = small_cfg(store_depth=4, update_interval=32)
+    stream = make_stream("iot", dim=DIM)
+    engine = _RecordingEngine(cfg, jax.random.key(0))
+    scfg = ServerConfig(max_batch=4, max_wait_ms=0.0, topk=5,
+                        two_stage=True, nprobe=4, adaptive=True,
+                        max_queue_depth=6, low_queue_depth=0,
+                        recover_after=2)
+    server = AsyncServer(cfg, scfg, engine=engine, publish_every=2,
+                         queue_max=4)
+    # ladder at (nprobe=4, depth=4, k=5): full -> (4,2) -> shed
+    assert len(server.plan_space.ladder) == 3
+    full = server.plan_space.full
+
+    for _ in range(4):
+        server.ingest(stream.next_batch(32)["embedding"],
+                      stream.next_batch(32)["doc_id"])
+    server.sync()
+
+    n_burst = 60
+    queries: dict[int, np.ndarray] = {}
+    qlock = threading.Lock()
+
+    def flooder():
+        for qv in stream.queries(n_burst)["embedding"]:
+            t = server.submit(qv)
+            with qlock:
+                queries[t] = np.asarray(qv)
+
+    sub = threading.Thread(target=flooder)
+    sub.start()
+    # let the backlog actually build before the first flush, so the
+    # controller deterministically escalates past the high watermark
+    while len(server._pending) < scfg.max_queue_depth + scfg.max_batch:
+        time.sleep(0.001)
+    answers = []
+    while len(answers) < n_burst:
+        answers += server.flush()
+        if len(answers) % 12 == 0:  # concurrent ingest dispatch pressure
+            server.ingest(stream.next_batch(16)["embedding"],
+                          stream.next_batch(16)["doc_id"])
+    sub.join()
+    # recovery trickle: empty-queue flushes accumulate calm and walk the
+    # controller back up to full effort (recover_after=2 per level)
+    for qv in stream.queries(10)["embedding"]:
+        t = server.submit(qv)
+        with qlock:
+            queries[t] = np.asarray(qv)
+        answers += server.flush()
+    server.sync()
+    answers += server.drain()
+    server.close()
+
+    # exactly once, shed included
+    tickets = [a["ticket"] for a in answers]
+    assert sorted(tickets) == sorted(queries)
+    assert len(tickets) == len(set(tickets)) == n_burst + 10
+
+    shed = [a for a in answers if a["shed"]]
+    degraded_live = [a for a in answers if a["degraded"] and not a["shed"]]
+    full_effort = [a for a in answers if not a["degraded"]]
+    assert shed and degraded_live and full_effort  # whole ladder exercised
+    assert server.stats["shed"] == len(shed)
+    assert answers[-1]["degraded"] is False  # recovered by the tail
+
+    for a in shed:  # explicit overload sentinel, never engine output
+        assert a["degraded"] is True
+        assert "snapshot_version" in a
+        assert np.all(a["doc_ids"] == -1) and np.all(a["clusters"] == -1)
+        assert np.all(np.isneginf(a["scores"]))
+    for a in degraded_live:
+        plan = QueryPlan(a["plan"]["nprobe"], a["plan"]["depth"])
+        assert plan != full
+    # every live answer is bit-reproducible from its recorded snapshot
+    # under the plan it says it was served with
+    live = [a for a in answers if not a["shed"]]
+    for a in live[:: max(1, len(live) // 12)]:
+        snap = engine.published[a["snapshot_version"]]
+        plan = QueryPlan(a["plan"]["nprobe"], a["plan"]["depth"])
+        want = engine.query_snapshot(snap, queries[a["ticket"]][None], 5,
+                                     two_stage=True, plan=plan)
+        np.testing.assert_array_equal(a["doc_ids"], np.asarray(want[2][0]))
+        np.testing.assert_array_equal(a["scores"], np.asarray(want[0][0]))
 
 
 def test_async_ingest_thread_error_surfaces():

@@ -185,7 +185,7 @@ class _FakeFrontend(QueryFrontend):
     """Front end with a host-only query batch — isolates the threading
     behavior of submit/flush/drain from any device work."""
 
-    def _query_batch(self, q):
+    def _query_batch(self, q, plan=None):
         b, k = q.shape[0], self.scfg.topk
         ids = np.tile(np.arange(k, dtype=np.int32), (b, 1))
         return (np.zeros((b, k), np.float32), ids, ids,
