@@ -26,7 +26,7 @@ def _tables():
                             table14_two_stage, table15_sharded,
                             table16_async_serving, table17_quantized_store,
                             table18_ingest_throughput, table19_serve_fusion,
-                            table20_overload)
+                            table20_overload, table21_hotset_cache)
     scale = 0.5 if FAST else 1.0
 
     def n(x):
@@ -50,6 +50,7 @@ def _tables():
         ("table18", lambda: table18_ingest_throughput.run(n_batches=n(24))),
         ("table19", lambda: table19_serve_fusion.run(reps=n(40))),
         ("table20", lambda: table20_overload.run(n_queries=n(600))),
+        ("table21", lambda: table21_hotset_cache.run(n_timed=n(48))),
         ("fig3", lambda: fig3_hyperparams.run(n_batches=n(20))),
     ]
 
@@ -58,11 +59,11 @@ def _headline(row: dict) -> tuple[str, float, float]:
     name_parts = [str(row.get(k)) for k in
                   ("method", "stream", "basis", "strategy", "policy",
                    "variant", "param", "budget_mb", "window_W", "interval_T",
-                   "value")
+                   "alpha", "value")
                   if row.get(k) is not None]
     name = f"{row['table']}/" + "-".join(name_parts or ["_"])
     us = 1000.0 * float(row.get("ingest_latency_ms", 0.0) or 0.0)
-    for key in ("recall10", "EM", "throughput_dps"):
+    for key in ("recall10", "EM", "throughput_dps", "p50_speedup"):
         if key in row:
             return name, us, float(row[key])
     return name, us, 0.0

@@ -70,6 +70,28 @@ class HHConfig:
     u_max: float = 0.5
     b_step: int = 16
 
+    def __post_init__(self):
+        # Fail at config construction, not at the first init()/update():
+        # a zero capacity silently produces empty label vectors and a
+        # non-positive sketch shape breaks the CMS hashing — both used to
+        # surface as shape errors deep inside jit.
+        if self.capacity <= 0:
+            raise ValueError(
+                f"HHConfig.capacity must be positive, got {self.capacity}")
+        if self.cms_depth <= 0:
+            raise ValueError(
+                f"HHConfig.cms_depth must be positive, got {self.cms_depth}")
+        if self.cms_width <= 0:
+            raise ValueError(
+                f"HHConfig.cms_width must be positive, got {self.cms_width}")
+        if self.max_capacity is not None and self.max_capacity <= 0:
+            raise ValueError(
+                "HHConfig.max_capacity must be positive when set, got "
+                f"{self.max_capacity}")
+        if self.window <= 0:
+            raise ValueError(
+                f"HHConfig.window must be positive, got {self.window}")
+
     def bmax(self) -> int:
         if self.adaptive and self.max_capacity is not None:
             return max(self.max_capacity, self.capacity)

@@ -191,6 +191,14 @@ class Engine:
         self.state = (pipeline.init(cfg, key, warmup)
                       if state is None else state)
         self._version = 0
+        # per-publish dirty-cluster accounting, same contract as
+        # ``ShardedEngine.last_publish_info``: {"mode", "dirty_clusters",
+        # "dirty_frac", "dirty"} where ``dirty`` is the exact np index
+        # array of clusters whose snapshot-visible state can have changed
+        # since the previous publish (None on the first publish — no
+        # baseline). The serving result cache invalidates against it.
+        self._pub_sig = None
+        self.last_publish_info: dict | None = None
 
     def ingest(self, x: jnp.ndarray, doc_ids: jnp.ndarray) -> dict:
         self.state, info = pipeline.ingest_batch(
@@ -220,6 +228,7 @@ class Engine:
         """
         st = self.state
         self._version += 1
+        self._update_publish_info()
         return ServingSnapshot(
             index=jax.tree.map(jnp.copy, st.index),
             route_labels=jnp.copy(st.route_labels),
@@ -227,6 +236,43 @@ class Engine:
             version=self._version,
             published_at=time.time(),
         )
+
+    def _host_signature(self):
+        """(cluster counts, ring write ptrs, rep ids) — the exact change
+        detector ``engine.sharded`` uses per shard: all three are monotone
+        under kept assignments and every snapshot-visible cluster mutation
+        (centroid, ring write, representative) implies one."""
+        st = self.state
+        return (np.asarray(st.clus.counts), np.asarray(st.store.ptr),
+                np.asarray(st.rep_ids))
+
+    def prepare_publish(self):
+        """Host-blocking publish prep (serving-runtime hook): wait for
+        in-flight ingest execution OUTSIDE the runtime's dispatch lock so
+        the signature fetch in ``publish`` never stalls a query."""
+        st = self.state
+        jax.block_until_ready((st.clus.counts, st.store.ptr, st.rep_ids))
+
+    def _update_publish_info(self):
+        """Diff the host signature against the previous publish to name
+        the exact dirty-cluster set this publication can have changed."""
+        k = self.cfg.clus.num_clusters
+        sig = self._host_signature()
+        if self._pub_sig is None:
+            self.last_publish_info = {"mode": "full", "dirty_clusters": k,
+                                      "dirty_frac": 1.0, "dirty": None}
+        else:
+            dirty = np.zeros((k,), bool)
+            for new, old in zip(sig, self._pub_sig):
+                dirty |= new != old
+            idx = np.nonzero(dirty)[0].astype(np.int32)
+            self.last_publish_info = {
+                "mode": "delta" if idx.size else "republish",
+                "dirty_clusters": int(idx.size),
+                "dirty_frac": float(idx.size) / k,
+                "dirty": idx,
+            }
+        self._pub_sig = sig
 
     def query_snapshot(self, snap: ServingSnapshot, q: jnp.ndarray,
                        k: int = 10, *, two_stage: bool = False,

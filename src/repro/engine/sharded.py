@@ -177,9 +177,13 @@ class ShardedEngine:
         self._pub_cache = None
         self._pub_sig = None
         self._delta_fns: dict = {}
-        # host-side record of the last publication for observability:
+        # host-side record of the last publication for observability and
+        # precise cache invalidation:
         # {"mode": "full"|"delta"|"republish", "dirty_clusters": int,
-        #  "dirty_frac": float}. Set by every reconcile() path.
+        #  "dirty_frac": float, "dirty": np.ndarray|None}. ``dirty`` is
+        # the exact dirty-cluster index array whenever the signature was
+        # diffed, None when there was no baseline (consumers must assume
+        # everything changed). Set by every reconcile() path.
         self.last_publish_info: dict | None = None
         self._counters_fn = None
 
@@ -466,7 +470,7 @@ class ShardedEngine:
         is used instead. Publications are bit-identical either way.
         """
         k = self.cfg.clus.num_clusters
-        dirty_idx = sig = None
+        dirty_idx = sig = idx = None
         if self.reconcile_mode == "delta" and self._pub_cache is not None:
             sig = self._host_signature()
             dirty = np.zeros((k,), bool)
@@ -480,7 +484,8 @@ class ShardedEngine:
                 self._pub_sig = sig
                 self.last_publish_info = {"mode": "republish",
                                           "dirty_clusters": 0,
-                                          "dirty_frac": 0.0}
+                                          "dirty_frac": 0.0,
+                                          "dirty": idx}
                 return self._publish(self.serving.index,
                                      self.serving.route_labels,
                                      self.serving.store)
@@ -494,8 +499,13 @@ class ShardedEngine:
             if self.reconcile_mode == "delta":
                 self._pub_sig = sig if sig is not None \
                     else self._host_signature()
+            # ``dirty`` stays the EXACT change set when the signature was
+            # diffed (a wide delta that fell back to the cheaper full
+            # rebuild); None when there was no baseline to diff against —
+            # consumers (the serving result cache) must then assume
+            # everything changed.
             self.last_publish_info = {"mode": "full", "dirty_clusters": k,
-                                      "dirty_frac": 1.0}
+                                      "dirty_frac": 1.0, "dirty": idx}
             return self._publish(index, route_labels, store)
 
         n_bucket = min(k, max(self.delta_bucket_min,
@@ -514,7 +524,8 @@ class ShardedEngine:
         self._pub_sig = sig
         self.last_publish_info = {"mode": "delta",
                                   "dirty_clusters": int(dirty_idx.size),
-                                  "dirty_frac": float(dirty_idx.size) / k}
+                                  "dirty_frac": float(dirty_idx.size) / k,
+                                  "dirty": dirty_idx}
         return self._publish(index, route_labels, store)
 
     def prepare_publish(self):

@@ -363,7 +363,8 @@ def rerank(store, qn: jnp.ndarray, routes: jnp.ndarray, k: int,
 
 def serve_topk(index_cfg: index_lib.IndexConfig, index, route_labels, store,
                q: jnp.ndarray, k: int, nprobe: int,
-               use_pallas: bool | None, depth: int | None = None):
+               use_pallas: bool | None, depth: int | None = None,
+               source: str = "store"):
     """Stages 1+2 fused: ONE device program routes each query through the
     prototype index (running top-``nprobe``, no [Q, cap] score matrix in
     HBM), DMAs only the routed ring tiles, dequant-reranks them with fp32
@@ -382,7 +383,9 @@ def serve_topk(index_cfg: index_lib.IndexConfig, index, route_labels, store,
     ``depth`` (a QueryPlan's rerank depth) clips each routed ring to its
     first ``depth`` slots before the kernel; None = full ring. The
     (nprobe, depth) pair is the plan bucket the dispatcher keys its tune
-    cache and trace counters by.
+    cache and trace counters by; ``source`` tags an alternate ring block
+    (the pinned hot tier passes ``"hotset"`` with a tier-slot-remapped
+    ``route_labels``) so its compiled variants get their own identity.
 
     Returns (scores [Q,k] desc, pos [Q,k] = j*depth+slot into the route
     list, routes [Q,nprobe] cluster ids; -1 for dead entries everywhere).
@@ -394,7 +397,25 @@ def serve_topk(index_cfg: index_lib.IndexConfig, index, route_labels, store,
                                       scales, depth)
     return serve_topk_op(qr, qn, index.vectors, index.valid, route_labels,
                          embs, live, k, nprobe,
-                         scales=scales, use_pallas=use_pallas)
+                         scales=scales, use_pallas=use_pallas, source=source)
+
+
+def gather_rings(store, clusters: jnp.ndarray, valid: jnp.ndarray):
+    """Gather a row-subset of a (possibly cluster-sharded) doc store into
+    a compact contiguous block — the hot-set serving tier's pin step.
+
+    ``clusters`` [H] i32 store rows to pin (padding rows may repeat a real
+    cluster); ``valid`` [H] bool marks real entries. The gathered rows are
+    exact copies of the source rings (same dtype, same scales), so a
+    rerank over the tier is bit-identical to one over the full store;
+    padded rows get all-dead ids so they can never surface a document.
+
+    Returns a ``DocStore`` of shape ``[H, depth, ...]`` addressed by tier
+    slot — callers route into it with a remapped ``route_labels`` (true
+    cluster id -> tier slot, -1 for unpinned).
+    """
+    tier = jax.tree.map(lambda a: a[clusters], store)
+    return tier._replace(ids=jnp.where(valid[:, None], tier.ids, -1))
 
 
 def decode_rerank(store_ids, routes, scores, pos, depth: int, nprobe: int,

@@ -22,6 +22,7 @@ def serve_topk(
     *,
     scales: jnp.ndarray | None = None,
     use_pallas: bool | None = None,
+    source: str = "store",
 ):
     """Fused route + gather + dequant-rerank + top-k, one device program.
 
@@ -49,7 +50,14 @@ def serve_topk(
     # (nprobe, depth) IS the plan bucket — callers hand in bucketed
     # QueryPlans — so the per-variant counter and the tune-cache lookup
     # below key compiled variants by effort bucket, not just tile shape.
+    # ``source`` names the ring block being reranked: "store" (the full
+    # per-cluster store) or "hotset" (the pinned hot tier, a gathered
+    # row-subset whose ring count C is the tier bucket, not the cluster
+    # count) — tier programs get their own tune-cache / trace identity
+    # instead of silently aliasing the full-store variant.
     variant = f"np{nprobe}xd{depth}"
+    if source != "store":
+        variant = f"{variant}@{source}"
     obs.count_kernel_trace("serve", "pallas" if use_pallas else "ref",
                            variant=variant)
     if use_pallas:

@@ -16,6 +16,14 @@ queries answer from the latest snapshot without waiting for ingest.
 Shutdown drains the pending queue completely — the launcher asserts
 ``queries answered == queries submitted``.
 
+``--cache-entries N`` / ``--hotset`` (with ``--two-stage --async``) arm
+the two-level hot-set serving cache: a snapshot-versioned exact result
+cache with precise delta invalidation, and a query-side heavy-hitter hot
+set whose routed clusters pin into a compact fast tier (bounded by
+``--pin-budget-mb``, charged against the state-memory envelope). Both
+levels are bit-identical to uncached serving whenever they answer; the
+periodic report and the final summary carry hit-rate/pin numbers.
+
 ``--adaptive`` (with ``--two-stage``) arms query-adaptive serving:
 every flush picks a (nprobe, rerank depth) QueryPlan from a fixed
 bucket ladder, degrading under queue pressure (past
@@ -68,6 +76,21 @@ def main():
                          "the plan ladder (depth -> nprobe -> shed) and "
                          "recovers hysteretically; answers carry explicit "
                          "degraded/shed markers")
+    ap.add_argument("--cache-entries", type=int, default=0,
+                    help="snapshot-versioned exact result cache capacity "
+                         "(needs --two-stage --async; 0 disables). Delta "
+                         "publications invalidate precisely: only entries "
+                         "routed through dirty clusters are evicted")
+    ap.add_argument("--hotset", action="store_true",
+                    help="query-side heavy-hitter hot set (needs "
+                         "--two-stage --async): hot route sets' clusters "
+                         "pin into a compact fast tier served through the "
+                         "fused kernel dispatcher, bit-identical to the "
+                         "full store")
+    ap.add_argument("--pin-budget-mb", type=float, default=8.0,
+                    help="hot-tier pin budget in MiB (pow2-floored to a "
+                         "fixed cluster bucket, charged against "
+                         "state_memory_bytes)")
     ap.add_argument("--max-queue-depth", type=int, default=256,
                     help="pending-query high watermark that escalates "
                          "the degradation ladder one level per flush")
@@ -121,11 +144,22 @@ def main():
         store_dtype=args.store_dtype)
     assert not args.adaptive or args.two_stage, \
         "--adaptive requires --two-stage (plans schedule rerank effort)"
+    assert not (args.cache_entries or args.hotset) or args.two_stage, \
+        "--cache-entries/--hotset require --two-stage (cached answers " \
+        "record routed clusters)"
+    assert not (args.cache_entries or args.hotset) or args.async_serve, \
+        "--cache-entries/--hotset require --async (the cache is exact " \
+        "only over published snapshots)"
+    assert args.cache_entries >= 0, "--cache-entries must be >= 0"
+    assert args.pin_budget_mb > 0, "--pin-budget-mb must be positive"
     scfg = ServerConfig(max_batch=args.qps, topk=args.topk,
                         two_stage=args.two_stage, nprobe=args.nprobe,
                         adaptive=args.adaptive,
                         max_queue_depth=args.max_queue_depth,
-                        min_depth=args.min_depth)
+                        min_depth=args.min_depth,
+                        cache_entries=args.cache_entries,
+                        hotset=args.hotset,
+                        pin_budget_mb=args.pin_budget_mb)
 
     engine = None
     if mesh_shape is not None:
@@ -170,6 +204,16 @@ def main():
     if args.async_serve:
         server.close()
     print(f"index size       : {server.engine.index_size()} prototypes")
+    if args.cache_entries or args.hotset:
+        cs = server.cache_stats()
+        print(f"serving cache    : hit_rate={cs['hit_rate']:.3f} "
+              f"hits={cs['hits']} invalidated={cs['invalidated']} "
+              f"rekeyed={cs['rekeyed']}")
+        print(f"hot tier         : pinned={cs['pinned_clusters']} clusters "
+              f"({cs['pinned_bytes']} B) hot_served={cs['hot_served']} "
+              f"rebuilds={cs['tier_rebuilds']}")
+        print(f"state memory     : {server.state_memory_bytes()} B "
+              f"(incl. pinned tier)")
     if args.adaptive:
         print(f"plan ladder      : {' -> '.join(server.plan_space.describe())}")
         print(f"queries shed     : {server.stats['shed']}")

@@ -53,6 +53,12 @@ class Reporter:
             parts.append(f"lag={f['lag_docs']}docs")
             if f.get("snapshot_age_s") is not None:
                 parts.append(f"age={_fmt(f['snapshot_age_s'])}s")
+        cache = getattr(self.server, "cache_stats", None)
+        if cache is not None:
+            c = cache()
+            if c["enabled"]:
+                parts.append(f"hit={_fmt(c['hit_rate'])}")
+                parts.append(f"pin={c['pinned_bytes'] // 1024}KiB")
         reg = obs.metrics()
         if reg is not None:
             snap = reg.snapshot()["gauges"]
@@ -84,3 +90,14 @@ class Reporter:
                    if f.get("snapshot_age_s") is not None else "n/a")
             self.out(f"freshness        : snapshot v{f['snapshot_version']} "
                      f"lag={f['lag_docs']} docs age={age}")
+        cache = getattr(self.server, "cache_stats", None)
+        if cache is not None:
+            c = cache()
+            if c["enabled"]:
+                self.out(
+                    f"serving cache    : hit_rate={c['hit_rate']:.3f} "
+                    f"hits={c['hits']} misses={c['misses']} "
+                    f"invalidated={c['invalidated']} "
+                    f"staleness={c['hit_staleness']:.2f} "
+                    f"pin={c['pinned_bytes'] // 1024}KiB "
+                    f"hot_served={c['hot_served']}")

@@ -5,6 +5,12 @@
 ``runtime.AsyncServer`` — background ingest thread + atomic snapshot
                          publication; queries never block on ingest or
                          reconcile.
+``hotset.HotSet``       — query-side heavy-hitter hot set + pinned
+                         fast-tier serving (Level 1 of the serving cache).
+``result_cache.ResultCache`` — snapshot-versioned exact result cache with
+                         precise delta invalidation (Level 2).
 """
+from repro.serve.hotset import HotSet  # noqa: F401
+from repro.serve.result_cache import ResultCache  # noqa: F401
 from repro.serve.runtime import AsyncServer, ServerConfig  # noqa: F401
 from repro.serve.server import RAGServer  # noqa: F401

@@ -41,19 +41,24 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 import queue
 import threading
 import time
 from typing import Callable
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
 from repro.core import pipeline
-from repro.engine.engine import Engine
+from repro.engine import stages
+from repro.engine.engine import Engine, _resolve_plan
 from repro.engine.plan import PlanSpace
 from repro.serve.executor import DegradationController, PriorityDispatcher
+from repro.serve.hotset import HotSet
+from repro.serve.result_cache import ResultCache
 
 
 @dataclasses.dataclass
@@ -76,6 +81,42 @@ class ServerConfig:
     recover_after: int = 4      # calm flushes required to step back up
     min_depth: int = 1          # floor of the depth ladder
     min_nprobe: int = 1         # floor of the nprobe ladder
+    # ---- hot-set serving cache (two_stage + AsyncServer only) ----
+    # cache_entries > 0 arms the snapshot-versioned exact result cache
+    # (``serve.result_cache``): repeat queries answer from recorded exact
+    # results, delta publications invalidate only entries routed through
+    # dirty clusters. hotset=True arms the query-side heavy-hitter hot
+    # set (``serve.hotset``): the hot route sets' clusters pin into a
+    # compact fast tier served through the fused kernel dispatcher.
+    # Both are bit-identical to uncached serving whenever they answer.
+    cache_entries: int = 0      # result-cache capacity (0 = disabled)
+    hotset: bool = False        # pinned hot-tier serving
+    pin_budget_mb: float = 8.0  # hot-tier budget, charged against
+    #                             state_memory_bytes (pow2-floored rows)
+    hotset_capacity: int = 32   # HH tracker slots (route-set signatures)
+    hotset_refresh: int = 16    # flushes between hot-set reselections
+    hotset_min_count: int = 2   # min tracked count before a set pins
+
+
+def _pad_pow2(q: np.ndarray) -> np.ndarray:
+    """Zero-pad a query batch to the next power-of-two row count. Every
+    serve program is row-independent, so padding can never change a real
+    row's answer — it only bounds the compiled shape count (one variant
+    per pow2 bucket instead of one per sub-batch size)."""
+    b = q.shape[0]
+    n = 1 << (b - 1).bit_length()
+    if n == b:
+        return q
+    return np.concatenate([q, np.zeros((n - b, q.shape[1]), q.dtype)])
+
+
+@functools.partial(jax.jit, static_argnames=("index_cfg", "nprobe"))
+def _route_batch(index_cfg, index, route_labels, q, nprobe):
+    """The staged stage-1 route pass (``stages.route`` — the reference
+    the fused serve kernel's routes are pinned bit-identical to), as one
+    small jitted program: the cached serving path runs it once per flush
+    to witness cache exactness, hot-tier coverage, and hot-set tracking."""
+    return stages.route(index_cfg, index, route_labels, q, nprobe)
 
 
 class QueryFrontend:
@@ -98,6 +139,10 @@ class QueryFrontend:
                 "topk must be <= nprobe * store_depth"
             assert server_cfg.nprobe <= cfg.hh.bmax(), \
                 "nprobe must be <= the prototype index capacity"
+        assert not (server_cfg.cache_entries or server_cfg.hotset) \
+            or server_cfg.two_stage, \
+            "the hot-set serving cache requires two_stage=True (cached " \
+            "answers record routed clusters)"
         self.cfg = cfg
         self.scfg = server_cfg
         self.embed_fn = embed_fn
@@ -299,7 +344,13 @@ class QueryFrontend:
     def latency_stats(self) -> dict:
         """Running mean over all batches; percentiles over the bounded
         windows — per-batch dispatch latency (``p*_ms``) and per-query
-        enqueue→answer latency (``answer_p*_ms``)."""
+        enqueue→answer latency (``answer_p*_ms``).
+
+        The schema is CONSTANT for the life of the server: every key is
+        present (zero-safe) before the first flush, before the first
+        publish, and after ``close()`` — including the serving-cache
+        keys (``cache_hit_rate``/``pinned_bytes``), which report 0 when
+        caching is disabled or nothing has been served yet."""
         with self._lock:
             window = np.asarray(self.stats["query_latency_ms"],
                                 dtype=np.float64)
@@ -311,6 +362,8 @@ class QueryFrontend:
         def pct(a, q):
             return float(np.percentile(a, q)) if a.size else 0.0
 
+        cache = getattr(self, "_result_cache", None)
+        hotset = getattr(self, "_hotset", None)
         return {
             "batches": n,
             "mean_ms": lat_sum / n if n else 0.0,
@@ -322,7 +375,39 @@ class QueryFrontend:
             "answer_p90_ms": pct(answers, 90),
             "answer_p99_ms": pct(answers, 99),
             "answer_window": int(answers.size),
+            "cache_hit_rate": (cache.stats()["hit_rate"]
+                               if cache is not None else 0.0),
+            "pinned_bytes": (hotset.pinned_bytes
+                             if hotset is not None else 0),
         }
+
+    def cache_stats(self) -> dict:
+        """Serving-cache observability with a consistent zero-safe schema
+        whether or not either cache level is enabled (and at any point in
+        the server lifecycle — empty windows report zeros, never raise)."""
+        cache = getattr(self, "_result_cache", None)
+        hotset = getattr(self, "_hotset", None)
+        out = {
+            "enabled": cache is not None or hotset is not None,
+            "hits": 0, "misses": 0, "hit_rate": 0.0, "entries": 0,
+            "invalidated": 0, "cleared": 0, "rekeyed": 0,
+            "evicted_lru": 0, "hit_staleness": 0.0,
+            "pinned_bytes": 0, "pinned_clusters": 0, "hot_served": 0,
+            "tier_rebuilds": 0,
+        }
+        if cache is not None:
+            s = cache.stats()
+            for key in ("hits", "misses", "hit_rate", "entries",
+                        "invalidated", "cleared", "rekeyed", "evicted_lru",
+                        "hit_staleness"):
+                out[key] = s[key]
+        if hotset is not None:
+            h = hotset.stats()
+            out["pinned_bytes"] = h["pinned_bytes"]
+            out["pinned_clusters"] = h["pinned_clusters"]
+            out["hot_served"] = h["hot_served"]
+            out["tier_rebuilds"] = h["rebuilds"]
+        return out
 
     # ------------------------------------------------------------- interface
     def _query_batch(self, q: np.ndarray, plan=None):
@@ -363,6 +448,23 @@ class AsyncServer(QueryFrontend):
             engine = Engine(cfg, key, warmup)
         self.engine = engine
         self.publish_every = max(1, publish_every)
+        # ---- hot-set serving cache (built BEFORE the first publish so
+        # no publication can ever race their creation) ----
+        self._result_cache = (ResultCache(server_cfg.cache_entries)
+                              if server_cfg.cache_entries > 0 else None)
+        self._hotset = (HotSet(
+            cfg, max_batch=server_cfg.max_batch,
+            pin_budget_bytes=int(server_cfg.pin_budget_mb * 2**20),
+            capacity=server_cfg.hotset_capacity,
+            refresh_every=server_cfg.hotset_refresh,
+            min_count=server_cfg.hotset_min_count)
+            if server_cfg.hotset else None)
+        # publish events (version, dirty-cluster array) cross from the
+        # ingest thread to the query path through this deque (GIL-atomic
+        # append/popleft); the query path applies them IN ORDER up to the
+        # snapshot version it pinned, so invalidation can neither run
+        # ahead of the snapshot a flush serves from nor miss a publish.
+        self._pub_events: collections.deque = collections.deque()
         self._snapshot = engine.publish()   # queries never see None
         self._published_docs = 0
         self._docs_ingested = 0             # ingest-thread private
@@ -431,6 +533,14 @@ class AsyncServer(QueryFrontend):
         t0 = time.perf_counter()
         with self._dispatch.ingest():  # publish defers to queued flushes
             snap = self.engine.publish()
+        info = getattr(self.engine, "last_publish_info", None)
+        # the invalidation event is visible BEFORE the snapshot swap: any
+        # flush that pins the new version is guaranteed to find its dirty
+        # set queued (a flush still on the old version leaves it queued —
+        # version-gated application keeps ordering exact either way)
+        if self._result_cache is not None or self._hotset is not None:
+            self._pub_events.append(
+                (snap.version, info.get("dirty") if info else None))
         self._snapshot = snap        # atomic swap (single ref assignment)
         self._published_docs = docs
         self._since_publish = 0
@@ -441,11 +551,12 @@ class AsyncServer(QueryFrontend):
         # ingest thread — never on the query path
         pub_ms = (time.perf_counter() - t0) * 1e3
         lag = self.stats["docs"] - docs
-        info = getattr(self.engine, "last_publish_info", None)
         if span is not None:
             span.args["version"] = snap.version
-            if info is not None:
-                span.args.update(info)
+            if info is not None:   # scalars only: the dirty index array
+                #                    is not JSON-exportable span material
+                span.args.update({key: v for key, v in info.items()
+                                  if key != "dirty"})
             span.end()
             tr.counter("freshness", {"lag_docs": lag,
                                      "snapshot_version": snap.version})
@@ -509,10 +620,137 @@ class AsyncServer(QueryFrontend):
         self._check()
         snap = self._snapshot        # pin ONE snapshot for the whole batch
         self._last_snapshot = snap
-        with self._dispatch.query():  # enqueue-only, preempts ingest
-            return self.engine.query_snapshot(
-                snap, q, self.scfg.topk, two_stage=self.scfg.two_stage,
-                nprobe=self.scfg.nprobe, plan=plan)
+        if self._result_cache is None and self._hotset is None:
+            with self._dispatch.query():  # enqueue-only, preempts ingest
+                return self.engine.query_snapshot(
+                    snap, q, self.scfg.topk, two_stage=self.scfg.two_stage,
+                    nprobe=self.scfg.nprobe, plan=plan)
+        return self._query_batch_cached(snap, q, plan)
+
+    def _query_batch_cached(self, snap, q: np.ndarray, plan=None):
+        """Two-level cached serving for one flush, pinned to ``snap``.
+
+        1. apply queued publications up to the pinned version (precise
+           result-cache invalidation + hot-tier staleness);
+        2. route-free exact hits: entries whose routes were verified at
+           the pinned version answer immediately (stage-1 routing is a
+           pure function of the query within one snapshot version, so
+           re-deriving their routes is a no-op by determinism) — an
+           all-hit flush never touches the device;
+        3. ONE batched route pass over the *pending* sub-batch (the
+           staged stage-1 the fused kernel is pinned bit-identical to)
+           yields ordered routes — the exactness witness for entries that
+           survived a publish, the hot-tier coverage test, and the
+           heavy-hitter observation in a single small program;
+        4. remaining misses split into hot-covered (fused serve over the
+           pinned tier) and cold (the unchanged full-store fused path),
+           both padded to power-of-two buckets (row-independent math —
+           padding can never change a real row's answer) and inserted
+           back into the cache.
+
+        Every answer is bit-identical to what the uncached path would
+        return for the same snapshot, by construction at each step.
+        """
+        cache, hotset = self._result_cache, self._hotset
+        k = self.scfg.topk
+        nprobe_eff, depth = _resolve_plan(plan, self.scfg.nprobe)
+        store_depth = self.cfg.store_depth
+        depth_eff = store_depth if depth is None else min(depth, store_depth)
+        plan_key = (plan.key if plan is not None
+                    else f"np{nprobe_eff}xd{depth_eff}")
+        while self._pub_events and self._pub_events[0][0] <= snap.version:
+            version, dirty = self._pub_events.popleft()
+            if cache is not None:
+                cache.on_publish(version, dirty)
+            if hotset is not None:
+                hotset.note_publish(version, dirty)
+        B = q.shape[0]
+        scores = np.full((B, k), -np.inf, np.float32)
+        rows = np.full((B, k), -1, np.int32)
+        ids = np.full((B, k), -1, np.int32)
+        labels = np.full((B, k), -1, np.int32)
+        qbytes = [q[i].tobytes() for i in range(B)]
+        pend = []   # needs routing: unverified survivor or absent entry
+        for i in range(B):
+            ans = (cache.peek_exact(qbytes[i], plan_key, snap.version)
+                   if cache is not None else None)
+            if ans is not None:
+                scores[i], rows[i], ids[i], labels[i] = ans
+            else:
+                pend.append(i)
+        n_miss = 0
+        hot_served = 0
+        if pend:
+            pidx = np.asarray(pend)
+            with self._dispatch.query():
+                if hotset is not None:
+                    hotset.sync(snap)
+                routes = np.asarray(_route_batch(
+                    self.cfg.index, snap.index, snap.route_labels,
+                    jnp.asarray(_pad_pow2(q[pidx])),
+                    nprobe_eff))[:pidx.size]
+            miss_pos = []
+            for j, i in enumerate(pend):
+                ans = (cache.lookup(qbytes[i], plan_key, snap.version,
+                                    routes[j])
+                       if cache is not None else None)
+                if ans is not None:
+                    scores[i], rows[i], ids[i], labels[i] = ans
+                else:
+                    miss_pos.append(j)
+            # hot-set tracking observes the routed sub-batch only: the
+            # route-free hits above are exactly the queries that don't
+            # need the tier, so the counter keeps seeing the traffic the
+            # tier exists for
+            if hotset is not None:
+                hotset.observe(routes)
+            n_miss = len(miss_pos)
+        if n_miss:
+            mpos = np.asarray(miss_pos)
+            midx = pidx[mpos]
+            hot_mask = (hotset.covered(routes[mpos]) if hotset is not None
+                        else np.zeros((mpos.size,), bool))
+            hot_served = int(np.sum(hot_mask))
+            hot_sel, cold_sel = midx[hot_mask], midx[~hot_mask]
+            out_c = out_h = None
+            with self._dispatch.query():
+                if cold_sel.size:
+                    out_c = self.engine.query_snapshot(
+                        snap, _pad_pow2(q[cold_sel]), k, two_stage=True,
+                        nprobe=self.scfg.nprobe, plan=plan)
+                if hot_sel.size:
+                    out_h = hotset.serve(
+                        snap, jnp.asarray(_pad_pow2(q[hot_sel])), k,
+                        nprobe_eff, depth_eff, self.cfg.clus.use_pallas)
+            if out_c is not None:
+                n = cold_sel.size
+                sc, rw, di, cl = (np.asarray(a)[:n] for a in out_c)
+                scores[cold_sel], rows[cold_sel] = sc, rw
+                ids[cold_sel], labels[cold_sel] = di, cl
+            if out_h is not None:
+                n = hot_sel.size
+                sc, rw_t, di, cl_t = (np.asarray(a)[:n] for a in out_h)
+                rw, cl = hotset.remap(rw_t, cl_t)
+                scores[hot_sel], rows[hot_sel] = sc, rw
+                ids[hot_sel], labels[hot_sel] = di, cl
+            if cache is not None:
+                for j, i in zip(mpos, midx):
+                    cache.insert(qbytes[i], plan_key, snap.version,
+                                 routes[j], (scores[i].copy(),
+                                             rows[i].copy(), ids[i].copy(),
+                                             labels[i].copy()))
+        reg = obs.metrics()
+        if reg is not None:
+            reg.counter("cache_hits_total").inc(B - n_miss)
+            reg.counter("cache_misses_total").inc(n_miss)
+            if cache is not None:
+                reg.gauge("cache_entries").set(len(cache))
+            if hotset is not None:
+                reg.counter("hotset_served_total").inc(hot_served)
+                reg.gauge("hotset_pinned_bytes").set(hotset.pinned_bytes)
+                reg.gauge("hotset_pinned_clusters").set(
+                    hotset.stats()["pinned_clusters"])
+        return scores, rows, ids, labels
 
     def _batch_meta(self) -> dict:
         # shed flushes never call _query_batch, so fall back to the
@@ -566,12 +804,23 @@ class AsyncServer(QueryFrontend):
         self.close()
 
     # ------------------------------------------------------------ accounting
+    def state_memory_bytes(self) -> int:
+        """Engine state bytes PLUS the hot tier's resident pin bytes —
+        the serving-side number charged against the paper's 150 MB
+        envelope (the pinned block is real accelerator memory the cache
+        holds on top of the engine state)."""
+        base = self.engine.state_memory_bytes()
+        return base + (self._hotset.pinned_bytes
+                       if self._hotset is not None else 0)
+
     def freshness_stats(self) -> dict:
         """How far the published snapshot trails the ingested stream —
         in docs (lag) and in wall-clock seconds (snapshot age). Age is
         ``None`` when the pinned snapshot was never actually published
         (``published_at == 0.0``, e.g. a host-oracle snapshot injected in
-        tests), so a bogus 55-years age can never be reported."""
+        tests), so a bogus 55-years age can never be reported. The schema
+        is constant for the life of the server — before the first
+        publish-cadence tick and after ``close()`` alike."""
         snap = self._snapshot
         published_at = snap.published_at if snap.published_at > 0 else None
         return {

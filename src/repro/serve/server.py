@@ -42,6 +42,12 @@ class RAGServer(QueryFrontend):
                  key: jax.Array | None = None, warmup=None,
                  embed_fn=None, engine=None):
         super().__init__(cfg, server_cfg, embed_fn)
+        # the hot-set serving cache is exact only over immutable versioned
+        # snapshots; this server queries LIVE state, which has no publish
+        # boundary to invalidate against
+        assert not (server_cfg.cache_entries or server_cfg.hotset), \
+            "result caching / hot-set serving requires the async " \
+            "snapshot runtime (serve.runtime.AsyncServer)"
         if engine is not None:
             # the construction-time asserts must validate the config the
             # engine will actually query with

@@ -181,7 +181,10 @@ def test_server_runs_on_explicit_engine():
     assert empty == {"batches": 0, "mean_ms": 0.0, "p50_ms": 0.0,
                      "p90_ms": 0.0, "p99_ms": 0.0, "window": 0,
                      "answer_p50_ms": 0.0, "answer_p90_ms": 0.0,
-                     "answer_p99_ms": 0.0, "answer_window": 0}
+                     "answer_p99_ms": 0.0, "answer_window": 0,
+                     # serving-cache keys are part of the constant schema,
+                     # zero-safe when caching is disabled
+                     "cache_hit_rate": 0.0, "pinned_bytes": 0}
     answered = []
     for _ in range(4):
         b = s.next_batch(32)

@@ -128,3 +128,73 @@ def test_property_merge_union_counts(a_labels, b_labels):
             zip(*np.unique(np.concatenate([a_labels, b_labels]),
                            return_counts=True))}
     assert got == true
+
+
+# --------------------------------------------------------- config validation
+def test_config_rejects_nonpositive_capacity():
+    import pytest
+
+    with pytest.raises(ValueError, match="capacity"):
+        hh.HHConfig(capacity=0)
+    with pytest.raises(ValueError, match="capacity"):
+        hh.HHConfig(capacity=-3)
+
+
+def test_config_rejects_bad_cms_shape():
+    import pytest
+
+    with pytest.raises(ValueError, match="cms_depth"):
+        hh.HHConfig(cms_depth=0)
+    with pytest.raises(ValueError, match="cms_width"):
+        hh.HHConfig(cms_width=-1)
+    with pytest.raises(ValueError, match="max_capacity"):
+        hh.HHConfig(adaptive=True, max_capacity=0)
+    with pytest.raises(ValueError, match="window"):
+        hh.HHConfig(window=0)
+    # the boundary-valid config still constructs
+    assert hh.HHConfig(capacity=1, cms_depth=1, cms_width=1).bmax() == 1
+
+
+# ------------------------------------------- decay / eviction edge cases the
+# query-side hot-set tracker leans on (estimated_counts / active_mask)
+def test_empty_state_counts_and_mask():
+    for morris in (False, True):
+        cfg = hh.HHConfig(capacity=4, morris=morris)
+        state = hh.init(cfg)
+        # estimated_counts of an empty state is exactly zero even under
+        # Morris (2^0 - 1 == 0), and no slot is active
+        assert np.all(np.asarray(hh.estimated_counts(cfg, state)) == 0.0)
+        assert not np.any(np.asarray(hh.active_mask(state)))
+
+
+def test_capacity_one_eviction_churn():
+    """A single-slot counter under an adversarial alternating stream:
+    the slot churns but the invariants hold at every step."""
+    cfg = hh.HHConfig(capacity=1, admit_prob=1.0,
+                      policy=hh.Policy.MIN_EVICT)
+    state, _ = _run(cfg, np.array([7, 8, 7, 9, 9, 9]))
+    mask = np.asarray(hh.active_mask(state))
+    assert mask.shape == (1,) and mask[0]
+    # exactly one label survives and its count never exceeds its true
+    # frequency in the stream (MIN_EVICT resets to 1 on takeover)
+    label = int(state.labels[0])
+    assert label in (7, 8, 9)
+    est = np.asarray(hh.estimated_counts(cfg, state))
+    assert 1 <= est[0] <= 3
+    assert int(state.total_evictions) > 0
+
+
+def test_all_evicted_members_leave_no_active_slots():
+    """Labels beyond active_capacity are masked out: shrink the active
+    window after filling and the mask/estimates must agree."""
+    cfg = hh.HHConfig(capacity=8, admit_prob=1.0)
+    state, _ = _run(cfg, np.arange(8))
+    assert int(np.sum(np.asarray(hh.active_mask(state)))) == 8
+    shrunk = state._replace(active_capacity=jnp.int32(0))
+    # every slot evicted from the active window: mask empty, and the
+    # hot-set selection pattern (counts masked by active_mask) sees none
+    mask = np.asarray(hh.active_mask(shrunk))
+    assert not mask.any()
+    est = np.asarray(hh.estimated_counts(cfg, shrunk))
+    assert np.all(est[mask] == 0) if mask.any() else True
+    assert float(np.where(mask, est, 0.0).sum()) == 0.0
