@@ -26,7 +26,8 @@ def _tables():
                             table14_two_stage, table15_sharded,
                             table16_async_serving, table17_quantized_store,
                             table18_ingest_throughput, table19_serve_fusion,
-                            table20_overload, table21_hotset_cache)
+                            table20_overload, table21_hotset_cache,
+                            table22_recovery)
     scale = 0.5 if FAST else 1.0
 
     def n(x):
@@ -51,6 +52,7 @@ def _tables():
         ("table19", lambda: table19_serve_fusion.run(reps=n(40))),
         ("table20", lambda: table20_overload.run(n_queries=n(600))),
         ("table21", lambda: table21_hotset_cache.run(n_timed=n(48))),
+        ("table22", lambda: table22_recovery.run(n_batches=n(18))),
         ("fig3", lambda: fig3_hyperparams.run(n_batches=n(20))),
     ]
 

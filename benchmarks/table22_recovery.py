@@ -1,0 +1,293 @@
+"""Table 22 — crash recovery cost and checkpoint-cadence economics.
+
+Two experiments over the durable ingest path (write-ahead journal +
+full/delta engine checkpoints, ``repro.serve.durability``):
+
+1. **Recovery sweep.** For each checkpoint cadence, a durable server
+   ingests a seeded stream and is killed mid-stream by an injected
+   ingest-thread crash (simulated SIGKILL: no final checkpoint, no
+   journal truncation). A fresh server is then constructed over the same
+   directories and its wall-clock time-to-serving is measured — restore
+   of the newest checkpoint chain plus journal-tail replay through the
+   normal ingest path. Short cadences leave a short journal tail and
+   recover fast; long cadences shift the cost into replay. The recovered
+   server and an uncrashed reference answer the SAME queries and the
+   answers are asserted bit-identical — so the Recall@10 gap (both sides
+   still computed independently against the archive oracle) is asserted
+   to be exactly 0.000.
+
+2. **Delta economy.** On a store-dominant engine (512 clusters x depth-16
+   rings) a full checkpoint is followed by one tiny ingest batch touching
+   <= 1% of clusters and a delta checkpoint. The delta must be >= 2x
+   cheaper than the full in bytes written (in practice it is ~100x: only
+   dirty-cluster rows of the per-cluster leaves are written). The delta
+   chain is then restored and asserted leaf-for-leaf identical to the
+   live state.
+
+Reported per cadence: journal tail length (batches + bytes on disk),
+recovery seconds, docs replayed, checkpoint counts/bytes by mode, and
+the recall pair. ``--smoke`` runs one cadence with a shorter stream —
+the CI crash-recovery gate.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+DIM = 48
+TOPK = 10
+NPROBE = 8
+DEPTH = 8
+INGEST_BATCH = 64
+N_QUERIES = 32
+CADENCES = (2, 8, 32)
+SMOKE_CADENCES = (4,)
+
+# delta-economy cell: the ring store dominates checkpoint bytes, so a
+# near-clean delta must be far cheaper than a full
+ECON_CLUSTERS = 512
+ECON_DIM = 64
+ECON_DEPTH = 16
+ECON_TOUCH = 4            # docs in the dirtying batch (<= 1% of clusters)
+GATE_BYTES_RATIO = 2.0    # full >= 2x delta
+GATE_DIRTY_FRAC = 0.01
+
+
+def _stream(seed: int = 0):
+    from repro.data.streams import StreamConfig, TopicStream
+
+    return TopicStream(StreamConfig(
+        "synthetic-drift", dim=DIM, n_topics=64, zipf_s=1.05, drift=0.03,
+        burstiness=0.05, noise=0.45, background_frac=0.10, seed=2200 + seed))
+
+
+def _cfg():
+    from repro.configs.streaming_rag import paper_pipeline_config
+
+    return paper_pipeline_config(dim=DIM, k=64, capacity=48, alpha=0.0,
+                                 update_interval=256, store_depth=DEPTH)
+
+
+def _serve_cfg():
+    from repro.serve.runtime import ServerConfig
+
+    return ServerConfig(max_batch=8, max_wait_ms=0.0, topk=TOPK,
+                        two_stage=True, nprobe=NPROBE)
+
+
+def _answers(server, queries: np.ndarray) -> list[dict]:
+    out = []
+    for i in range(0, len(queries), 8):
+        for q in queries[i:i + 8]:
+            server.submit(q)
+        out.extend(server.flush())
+    return out
+
+
+def _recall10(archive, qs: np.ndarray, answers: list[dict]) -> float:
+    """Topic-coverage Recall@10 vs the exact archive oracle (the
+    benchmarks/common convention, as in tables 14/20/21)."""
+    arc = archive.materialize()
+    oracle_ids, _ = arc.oracle_topk(qs, TOPK)
+    recalls = []
+    for i, a in enumerate(answers):
+        o_topics = {t for t in arc.T[oracle_ids[i]] if t >= 0}
+        got = [int(d) for d in a["doc_ids"] if 0 <= d < len(arc.T)]
+        r_topics = {arc.T[d] for d in got if arc.T[d] >= 0}
+        recalls.append(len(o_topics & r_topics) / max(len(o_topics), 1))
+    return float(np.mean(recalls))
+
+
+def _recovery_cell(cadence: int, n_batches: int, crash_at: int,
+                   seed: int) -> dict:
+    import jax
+
+    from benchmarks.common import DocArchive
+    from repro.engine.engine import Engine
+    from repro.serve.durability import DurabilityConfig
+    from repro.serve.runtime import AsyncServer
+    from repro.testing import faults
+
+    cfg = _cfg()
+    stream = _stream(seed)
+    archive = DocArchive(DIM)
+    batches = []
+    for _ in range(n_batches):
+        b = stream.next_batch(INGEST_BATCH)
+        archive.add(b)
+        batches.append(b)
+    queries = np.asarray(_stream(seed + 7).queries(N_QUERIES)["embedding"],
+                         np.float32)
+
+    root = tempfile.mkdtemp(prefix=f"table22_c{cadence}_")
+    try:
+        dcfg = DurabilityConfig(checkpoint_dir=root, checkpoint_every=cadence)
+        srv = AsyncServer(cfg, _serve_cfg(),
+                          engine=Engine(cfg, jax.random.key(seed)),
+                          publish_every=4, durability=dcfg)
+        # kill the ingest thread at a fixed batch boundary: batches past
+        # the crash are journaled (append happens before the enqueue) but
+        # never applied — exactly the SIGKILL-mid-stream shape
+        with faults.inject(f"ingest.admit:crash@{crash_at + 1}"):
+            for b in batches:
+                try:
+                    srv.ingest(b["embedding"], b["doc_id"])
+                except RuntimeError:
+                    pass  # thread already dead; batch journaled before _put
+            srv._thread.join(60.0)
+            assert not srv._thread.is_alive()
+        srv._durable.ckpt.wait()  # let the in-flight async write land
+        pre = srv._durable.stats()
+        srv._durable.close()
+
+        # time-to-serving of the recovered process: checkpoint-chain
+        # restore + journal-tail replay + first publish, all inside the
+        # fresh server's constructor (engine init stays outside the clock)
+        engine2 = Engine(cfg, jax.random.key(seed))
+        t0 = time.perf_counter()
+        srv2 = AsyncServer(cfg, _serve_cfg(), engine=engine2,
+                           publish_every=4, durability=dcfg)
+        recovery_s = time.perf_counter() - t0
+        rep = srv2.recovery_report
+        assert rep is not None and rep["quarantined"] == []
+        assert rep["applied_seq"] == n_batches - 1, rep
+
+        srv_ref = AsyncServer(cfg, _serve_cfg(),
+                              engine=Engine(cfg, jax.random.key(seed)),
+                              publish_every=10**9)
+        try:
+            for b in batches:
+                srv_ref.ingest(b["embedding"], b["doc_id"])
+            srv_ref.sync()
+            srv2.sync()
+            ans_rec = _answers(srv2, queries)
+            ans_ref = _answers(srv_ref, queries)
+            # bit-identity of every answer — the recovery contract
+            for a, b in zip(ans_rec, ans_ref):
+                np.testing.assert_array_equal(a["doc_ids"], b["doc_ids"])
+                np.testing.assert_array_equal(a["scores"], b["scores"])
+            rec_r = _recall10(archive, queries, ans_rec)
+            rec_u = _recall10(archive, queries, ans_ref)
+            saves = srv2.robustness_stats()
+        finally:
+            srv_ref.close()
+            srv2.close()
+
+        return {
+            "table": "table22",
+            "variant": f"cadence{cadence}",
+            "cadence": cadence,
+            "batches": n_batches,
+            "crash_at": crash_at,
+            "checkpoint_seq": rep["checkpoint_seq"],
+            "journal_tail_batches": rep["replayed"],
+            "journal_disk_kib": round(pre["journal_disk_bytes"] / 1024, 1),
+            "docs_replayed": rep["docs_replayed"],
+            "recovery_s": round(recovery_s, 4),
+            "ckpt_full": pre["checkpoint_saves"]["full"],
+            "ckpt_delta": pre["checkpoint_saves"]["delta"],
+            "ckpt_full_kib": round(pre["checkpoint_bytes"]["full"] / 1024, 1),
+            "ckpt_delta_kib": round(pre["checkpoint_bytes"]["delta"] / 1024,
+                                    1),
+            "recall10": round(rec_r, 4),
+            "recall10_reference": round(rec_u, 4),
+            "recall_gap": round(rec_r - rec_u, 4),
+        }
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def _delta_economy_cell(seed: int) -> dict:
+    import jax
+
+    from repro.configs.streaming_rag import paper_pipeline_config
+    from repro.data.streams import make_stream
+    from repro.engine.engine import Engine
+    from repro.serve.durability import CheckpointStore
+    from repro.train import checkpoint as ckpt_lib
+
+    cfg = paper_pipeline_config(dim=ECON_DIM, k=ECON_CLUSTERS, capacity=64,
+                                alpha=0.0, update_interval=10**9,
+                                store_depth=ECON_DEPTH)
+    stream = make_stream("iot", dim=ECON_DIM, seed=seed)
+    engine = Engine(cfg, jax.random.key(seed))
+    for _ in range(4):  # spread warm docs over the cluster space
+        b = stream.next_batch(256)
+        engine.ingest(b["embedding"], b["doc_id"])
+
+    root = tempfile.mkdtemp(prefix="table22_econ_")
+    try:
+        store = CheckpointStore(root, cluster_axis=0)
+        t0 = time.perf_counter()
+        full = store.save(0, engine.checkpoint_state(), blocking=True)
+        full_s = time.perf_counter() - t0
+
+        # one tiny batch: the dirty set is the handful of clusters it
+        # landed in — everything else (the dominant ring store) is clean
+        b = stream.next_batch(ECON_TOUCH)
+        engine.ingest(b["embedding"], b["doc_id"])
+        t0 = time.perf_counter()
+        delta = store.save(1, engine.checkpoint_state(), blocking=True)
+        delta_s = time.perf_counter() - t0
+        assert delta["mode"] == "delta", delta
+
+        # the chain restores leaf-for-leaf what the live engine holds
+        tree, meta = store.restore(engine.checkpoint_state())
+        fa = ckpt_lib.flatten_tree(tree)
+        fb = ckpt_lib.flatten_tree(engine.checkpoint_state())
+        assert meta["seq"] == 1
+        for k in fb:
+            np.testing.assert_array_equal(np.asarray(fa[k]),
+                                          np.asarray(fb[k]))
+
+        dirty_frac = delta["dirty_clusters"] / ECON_CLUSTERS
+        return {
+            "table": "table22",
+            "variant": "delta-economy",
+            "num_clusters": ECON_CLUSTERS,
+            "store_depth": ECON_DEPTH,
+            "dirty_clusters": delta["dirty_clusters"],
+            "dirty_frac": round(dirty_frac, 4),
+            "full_kib": round(full["bytes"] / 1024, 1),
+            "delta_kib": round(delta["bytes"] / 1024, 1),
+            "bytes_ratio": round(full["bytes"] / max(delta["bytes"], 1), 1),
+            "full_s": round(full_s, 4),
+            "delta_s": round(delta_s, 4),
+        }
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def run(n_batches: int = 18, seed: int = 0, smoke: bool = False) -> list[dict]:
+    cadences = SMOKE_CADENCES if smoke else CADENCES
+    n_batches = max(8, min(n_batches, 10) if smoke else n_batches)
+    crash_at = (2 * n_batches) // 3
+
+    rows = [_recovery_cell(c, n_batches, crash_at, seed) for c in cadences]
+    econ = _delta_economy_cell(seed)
+    rows.append(econ)
+
+    # acceptance: recovery is EXACT at every cadence — identical answers,
+    # Recall@10 gap precisely zero — and near-clean delta checkpoints pay
+    # for themselves by at least 2x (in practice ~100x) in bytes
+    for r in rows[:-1]:
+        assert r["recall_gap"] == 0.0, r
+        assert r["journal_tail_batches"] >= 1, r
+    assert econ["dirty_frac"] <= GATE_DIRTY_FRAC, econ
+    assert econ["bytes_ratio"] >= GATE_BYTES_RATIO, econ
+    return rows
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "--smoke":
+        out = run(smoke=True)
+    else:
+        out = run()
+    for row in out:
+        print("ROW " + json.dumps(row), flush=True)
+    print("TABLE22-RECOVERY-OK", flush=True)

@@ -274,6 +274,25 @@ class Engine:
             }
         self._pub_sig = sig
 
+    # ------------------------------------------------------------ durability
+    # PipelineState leaves index clusters on their leading axis — the axis
+    # ``serve.durability`` slices dirty-cluster delta checkpoints on.
+    ckpt_cluster_axis = 0
+
+    def checkpoint_state(self):
+        """The pytree the durability layer checkpoints; doubles as the
+        abstract tree (shapes/dtypes/structure) recovery restores into."""
+        return self.state
+
+    def restore_state(self, state) -> None:
+        """Adopt a recovered state. The publish baseline resets so the
+        next publication reports mode "full" with ``dirty=None`` — the
+        event the serving caches treat as clear-everything, which is the
+        cache-coherence contract after recovery."""
+        self.state = jax.device_put(state)
+        self._pub_sig = None
+        self.last_publish_info = None
+
     def query_snapshot(self, snap: ServingSnapshot, q: jnp.ndarray,
                        k: int = 10, *, two_stage: bool = False,
                        nprobe: int = 8, plan=None):

@@ -541,6 +541,33 @@ class ShardedEngine:
         """Serving-protocol alias: reconcile and return the snapshot."""
         return self.reconcile()
 
+    # ------------------------------------------------------------ durability
+    # the stacked [S, ...] engine state indexes clusters on axis 1 — the
+    # axis ``serve.durability`` slices dirty-cluster delta checkpoints on
+    ckpt_cluster_axis = 1
+
+    def checkpoint_state(self):
+        """The stacked shard-local pytree the durability layer
+        checkpoints; doubles as the abstract tree recovery restores into
+        (checkpoints are mesh-elastic: restore re-shards onto the current
+        mesh, like ``train.checkpoint``)."""
+        return self.local
+
+    def restore_state(self, stacked) -> None:
+        """Adopt a recovered stacked state onto this engine's mesh. Every
+        publication baseline drops so the next reconcile is a full
+        rebuild publishing ``dirty=None`` — the clear-everything event
+        the serving caches key on, i.e. cache coherence after recovery."""
+        self.local = jax.device_put(
+            stacked,
+            shard_rules.engine_state_shardings(self.mesh, stacked,
+                                               self.data_axis))
+        self.serving = None
+        self._pub_cache = None
+        self._pub_sig = None
+        self.last_publish_info = None
+        self._batches_since_reconcile = 0
+
     def query(self, q, k: int = 10, *, two_stage: bool = False,
               nprobe: int = 8, plan=None):
         """Same contract as ``pipeline.query`` over the latest snapshot."""

@@ -24,6 +24,17 @@ set whose routed clusters pin into a compact fast tier (bounded by
 levels are bit-identical to uncached serving whenever they answer; the
 periodic report and the final summary carry hit-rate/pin numbers.
 
+``--checkpoint-dir DIR`` (with ``--async``) arms crash-safe streaming:
+every ingest batch is journaled (write-ahead, fsync'd) before it is
+enqueued, and the engine state is checkpointed every
+``--checkpoint-every`` applied batches (full once, dirty-cluster deltas
+after). If DIR already holds a previous run's state the server RECOVERS
+first — checkpoint restore + journal-tail replay, bit-identical to the
+uncrashed run — and prints a recovery line. SIGTERM triggers a graceful
+drain: stop ingesting, publish the tail, answer every pending query
+(the ``answered == submitted`` assertion still holds), take a final
+blocking checkpoint, and truncate the journal behind it.
+
 ``--adaptive`` (with ``--two-stage``) arms query-adaptive serving:
 every flush picks a (nprobe, rerank depth) QueryPlan from a fixed
 bucket ladder, degrading under queue pressure (past
@@ -36,6 +47,7 @@ assertion holds under overload too.
 from __future__ import annotations
 
 import argparse
+import signal
 
 
 def _parse_mesh(spec: str) -> tuple[int, int]:
@@ -97,6 +109,18 @@ def main():
     ap.add_argument("--min-depth", type=int, default=1,
                     help="floor of the plan ladder's rerank-depth "
                          "halvings (degradation never reranks shallower)")
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="arm crash-safe streaming (needs --async): "
+                         "write-ahead journal + full/delta engine "
+                         "checkpoints under this directory; a non-empty "
+                         "directory is RECOVERED from first")
+    ap.add_argument("--journal-dir", default="",
+                    help="journal location override (default: "
+                         "<checkpoint-dir>/journal — e.g. a faster disk)")
+    ap.add_argument("--checkpoint-every", type=int, default=16,
+                    help="applied ingest batches between checkpoints; "
+                         "shorter cadence = shorter journal tail to "
+                         "replay on recovery, more checkpoint writes")
     ap.add_argument("--reconcile-every", type=int, default=4,
                     help="ingest batches between snapshot publications "
                          "(sharded reconcile / async publish cadence)")
@@ -124,6 +148,7 @@ def main():
     from repro.configs.streaming_rag import paper_pipeline_config
     from repro.data.streams import make_stream
     from repro.obs.report import Reporter
+    from repro.serve.durability import DurabilityConfig
     from repro.serve.runtime import AsyncServer, ServerConfig
     from repro.serve.server import RAGServer
 
@@ -152,6 +177,19 @@ def main():
         "only over published snapshots)"
     assert args.cache_entries >= 0, "--cache-entries must be >= 0"
     assert args.pin_budget_mb > 0, "--pin-budget-mb must be positive"
+    assert not (args.checkpoint_dir or args.journal_dir) \
+        or args.async_serve, \
+        "--checkpoint-dir/--journal-dir require --async (durability " \
+        "journals the background ingest path)"
+    assert not args.journal_dir or args.checkpoint_dir, \
+        "--journal-dir is an override of --checkpoint-dir's default"
+    assert args.checkpoint_every >= 1, "--checkpoint-every must be >= 1"
+    durability = None
+    if args.checkpoint_dir:
+        durability = DurabilityConfig(
+            checkpoint_dir=args.checkpoint_dir,
+            journal_dir=args.journal_dir or None,
+            checkpoint_every=args.checkpoint_every)
     scfg = ServerConfig(max_batch=args.qps, topk=args.topk,
                         two_stage=args.two_stage, nprobe=args.nprobe,
                         adaptive=args.adaptive,
@@ -176,15 +214,33 @@ def main():
     if args.async_serve:
         server = AsyncServer(cfg, scfg, jax.random.key(0), warmup=warm,
                              engine=engine,
-                             publish_every=args.reconcile_every)
+                             publish_every=args.reconcile_every,
+                             durability=durability)
+        rep = server.recovery_report
+        if rep is not None:
+            print(f"recovered        : checkpoint_seq={rep['checkpoint_seq']} "
+                  f"replayed={rep['replayed']} batches "
+                  f"({rep['docs_replayed']} docs) "
+                  f"quarantined={rep['quarantined']}")
     else:
         server = RAGServer(cfg, scfg, jax.random.key(0), warmup=warm,
                            engine=engine)
+
+    # SIGTERM = graceful drain: finish the current round, skip the rest
+    # of the stream, then fall through to the normal shutdown path
+    # (final publish, full queue drain, blocking checkpoint + journal
+    # truncation in close()) — answered == submitted still holds.
+    terminated = []
+    signal.signal(signal.SIGTERM, lambda *_: terminated.append(True))
 
     reporter = Reporter(server, every=args.report_every)
     submitted = 0
     answered = 0
     for i in range(args.batches):
+        if terminated:
+            print(f"sigterm          : draining after {i}/{args.batches} "
+                  f"batches")
+            break
         b = stream.next_batch(args.batch)
         qs = stream.queries(args.qps)
         for q in qs["embedding"]:
@@ -202,8 +258,17 @@ def main():
     reporter.final(submitted, answered)
     assert answered == submitted, "shutdown drain lost queries"
     if args.async_serve:
-        server.close()
+        server.close()   # durable: final blocking checkpoint + truncation
     print(f"index size       : {server.engine.index_size()} prototypes")
+    if durability is not None:
+        rs = server.robustness_stats()
+        print(f"durability       : checkpoint_seq={rs['checkpoint_seq']} "
+              f"saves={rs['checkpoint_saves']} "
+              f"journal_tail={rs['journal_lag_batches']} batches "
+              f"({rs['journal_disk_bytes']} B, "
+              f"{rs['journal_segments']} segments)")
+        print(f"supervision      : restarts={rs['restarts']} "
+              f"quarantined={rs['quarantined']}")
     if args.cache_entries or args.hotset:
         cs = server.cache_stats()
         print(f"serving cache    : hit_rate={cs['hit_rate']:.3f} "

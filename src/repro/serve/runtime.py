@@ -43,6 +43,7 @@ import collections
 import dataclasses
 import functools
 import queue
+import random
 import threading
 import time
 from typing import Callable
@@ -56,9 +57,12 @@ from repro.core import pipeline
 from repro.engine import stages
 from repro.engine.engine import Engine, _resolve_plan
 from repro.engine.plan import PlanSpace
+from repro.serve.durability import (DurabilityConfig, DurableIngest,
+                                    classify_error)
 from repro.serve.executor import DegradationController, PriorityDispatcher
 from repro.serve.hotset import HotSet
 from repro.serve.result_cache import ResultCache
+from repro.testing import faults
 
 
 @dataclasses.dataclass
@@ -439,7 +443,10 @@ class AsyncServer(QueryFrontend):
                  server_cfg: ServerConfig, key: jax.Array | None = None,
                  warmup=None,
                  embed_fn: Callable[[np.ndarray], np.ndarray] | None = None,
-                 engine=None, publish_every: int = 4, queue_max: int = 64):
+                 engine=None, publish_every: int = 4, queue_max: int = 64,
+                 durability: DurabilityConfig | None = None,
+                 max_restarts: int = 8, backoff_base_s: float = 0.01,
+                 backoff_max_s: float = 1.0, supervise_seed: int = 0):
         super().__init__(cfg, server_cfg, embed_fn)
         if engine is not None:
             assert engine.cfg == cfg, "engine.cfg disagrees with cfg"
@@ -448,6 +455,28 @@ class AsyncServer(QueryFrontend):
             engine = Engine(cfg, key, warmup)
         self.engine = engine
         self.publish_every = max(1, publish_every)
+        # ---- supervision + durability (crash-safe streaming) ----
+        self.max_restarts = max_restarts
+        self._backoff = (backoff_base_s, backoff_max_s)
+        self._jitter = random.Random(supervise_seed)
+        self.restarts = 0
+        self.quarantined: list[int] = []   # poison-batch seqs (never silent)
+        self._attempts: dict[int, int] = {}
+        self._quarantine_after = (durability.quarantine_after
+                                  if durability is not None else 3)
+        self._error_seq: int | None = None
+        self._inflight = None              # ingest-thread resume state
+        self._inflight_stage = "done"
+        self._next_seq = 0                 # non-durable seq counter
+        self._ingest_lock = threading.Lock()  # journal order == queue order
+        self.recovery_report: dict | None = None
+        self._docs_ingested = 0             # ingest-thread private
+        self._durable = (DurableIngest(
+            durability, cluster_axis=getattr(engine, "ckpt_cluster_axis", 0))
+            if durability is not None else None)
+        if self._durable is not None and self._durable.needs_recovery():
+            self._recover()  # before the first publish: the initial
+            #                  snapshot already serves the recovered stream
         # ---- hot-set serving cache (built BEFORE the first publish so
         # no publication can ever race their creation) ----
         self._result_cache = (ResultCache(server_cfg.cache_entries)
@@ -466,8 +495,7 @@ class AsyncServer(QueryFrontend):
         # ahead of the snapshot a flush serves from nor miss a publish.
         self._pub_events: collections.deque = collections.deque()
         self._snapshot = engine.publish()   # queries never see None
-        self._published_docs = 0
-        self._docs_ingested = 0             # ingest-thread private
+        self._published_docs = self._docs_ingested  # recovery is published
         self._since_publish = 0
         self._error: BaseException | None = None
         self._queue: queue.Queue = queue.Queue(maxsize=max(1, queue_max))
@@ -491,19 +519,65 @@ class AsyncServer(QueryFrontend):
 
     # ---------------------------------------------------------- ingest thread
     def _ingest_loop(self):
-        try:
-            while True:
-                item = self._queue.get()
-                if item is self._STOP:
-                    self._publish()
+        """Supervisor: runs the ingest loop, classifies failures, and
+        restarts it with exponential backoff + seeded jitter within a
+        bounded budget. Fatal errors (and an exhausted budget) surface on
+        the caller thread with the failing batch's sequence number; an
+        :class:`~repro.testing.faults.InjectedCrash` escapes supervision
+        entirely — the thread dies like a SIGKILL'd process, with no
+        final publish/checkpoint/truncation, and only recovery from the
+        durable state brings the stream back."""
+        while True:
+            try:
+                self._ingest_run()
+                return
+            except faults.InjectedCrash:
+                return  # simulated process death: no finalization at all
+            except BaseException as e:
+                seq = (self._inflight[0]
+                       if isinstance(self._inflight, tuple) else None)
+                if (classify_error(e) == "fatal"
+                        or self.restarts >= self.max_restarts):
+                    self._error_seq = seq
+                    self._error = e  # set LAST: _check reads seq after it
                     return
-                if isinstance(item, threading.Event):  # sync barrier
-                    self._publish()
-                    item.set()
-                    continue
-                x, ids = item
+                self.restarts += 1
+                reg = obs.metrics()
+                if reg is not None:
+                    reg.counter("ingest_restarts_total").inc()
+                base, cap = self._backoff
+                delay = min(cap, base * (2 ** (self.restarts - 1)))
+                time.sleep(delay * (1.0 + 0.25 * self._jitter.random()))
+                self._on_restart(seq)
+
+    def _ingest_run(self):
+        """One supervised incarnation of the ingest loop. Per-batch work
+        is a resumable stage machine (admit -> publish -> checkpoint):
+        after a mid-batch failure the restart resumes at the FAILING
+        stage, so an already-applied batch is never double-ingested and a
+        failed cadence publish/checkpoint is retried immediately."""
+        while True:
+            item = self._inflight
+            if item is None:
+                item = self._queue.get()
+                self._inflight = item
+                self._inflight_stage = "admit"
+            if item is self._STOP:
+                self._publish()
+                if self._durable is not None:  # tail checkpoint + truncate
+                    self._checkpoint(blocking=True)
+                self._inflight = None
+                return
+            if isinstance(item, threading.Event):  # sync barrier
+                self._publish()
+                item.set()
+                self._inflight = None
+                continue
+            seq, x, ids = item
+            if self._inflight_stage == "admit":
+                faults.fault_point("ingest.admit", seq=seq)
                 tr = obs.tracer()
-                span = (tr.span("ingest.admit", cat="ingest",
+                span = (tr.span("ingest.admit", cat="ingest", seq=seq,
                                 batch=int(np.asarray(ids).size))
                         if tr is not None else None)
                 with self._dispatch.ingest():
@@ -512,12 +586,78 @@ class AsyncServer(QueryFrontend):
                     span.end()
                 self._docs_ingested += int(np.sum(np.asarray(ids) >= 0))
                 self._since_publish += 1
+                if self._durable is not None:
+                    self._durable.batch_applied(seq)
+                self._attempts.pop(seq, None)
+                self._inflight_stage = "publish"
+            if self._inflight_stage == "publish":
                 if self._since_publish >= self.publish_every:
                     self._publish()
-        except BaseException as e:  # surface on the caller thread
-            self._error = e
+                self._inflight_stage = "checkpoint"
+            if self._inflight_stage == "checkpoint":
+                if (self._durable is not None
+                        and self._durable.should_checkpoint()):
+                    self._checkpoint()
+                self._inflight = None
+                self._inflight_stage = "done"
+
+    def _on_restart(self, seq: int | None):
+        """Post-backoff restart hygiene: poison-batch quarantine and
+        serving-cache coherence."""
+        # a batch that burned its whole per-batch retry budget at the
+        # admit stage is quarantined: dropped from the retry loop ONLY —
+        # counted, logged, and remembered so recovery replay skips it too
+        if seq is not None and self._inflight_stage == "admit":
+            n = self._attempts.get(seq, 0) + 1
+            self._attempts[seq] = n
+            if n >= self._quarantine_after:
+                self.quarantined.append(seq)
+                if self._durable is not None:
+                    self._durable.quarantined.append(seq)
+                self._attempts.pop(seq, None)
+                self._inflight = None
+                self._inflight_stage = "done"
+                reg = obs.metrics()
+                if reg is not None:
+                    reg.counter("ingest_quarantined_total").inc()
+        # cache coherence: clear the result cache at the pinned version
+        # and mark the hot tier stale — nothing a failed attempt might
+        # have half-published can survive the restart
+        if self._result_cache is not None or self._hotset is not None:
+            self._pub_events.append((self._snapshot.version, None))
+
+    def _checkpoint(self, blocking: bool = False):
+        """Cadence checkpoint off the ingest thread (async write; the
+        journal truncates from the writer's durable callback). A prior
+        write failure was counted by the store and left the dirty
+        baseline untouched — this save simply covers it too."""
+        self._durable.ckpt.poll_error()  # counted; cleared for the retry
+        self._durable.checkpoint(
+            self.engine.checkpoint_state(),
+            metadata={"docs_ingested": self._docs_ingested},
+            blocking=blocking)
+
+    def _recover(self):
+        """Constructor-time recovery: restore the newest checkpoint chain
+        and replay the journal tail through the normal ingest path —
+        bit-identical to the engine that never crashed (determinism of
+        ingest + batch-boundary checkpoints). Runs before the first
+        publish, so the initial snapshot already serves the recovered
+        stream and every cache starts coherent."""
+        eng = self.engine
+        report = self._durable.recover(
+            eng.checkpoint_state(),
+            lambda x, ids: eng.ingest(x, ids),
+            lambda tree, meta: eng.restore_state(tree))
+        self.recovery_report = report
+        self.quarantined = list(report["quarantined"])
+        docs = report["docs_checkpointed"] + report["docs_replayed"]
+        self._docs_ingested = docs
+        with self._lock:
+            self.stats["docs"] = docs
 
     def _publish(self):
+        faults.fault_point("publish")
         # capture the doc watermark BEFORE publishing: the snapshot holds
         # at least everything ingested up to here
         docs = self._docs_ingested
@@ -574,7 +714,11 @@ class AsyncServer(QueryFrontend):
 
     def _check(self):
         if self._error is not None:
-            raise RuntimeError("async ingest thread died") from self._error
+            seq = self._error_seq
+            raise RuntimeError(
+                "async ingest thread died"
+                + (f" (batch seq {seq})" if seq is not None else "")
+            ) from self._error
 
     def _put(self, item, timeout: float):
         """Queue.put that can never deadlock on a dead ingest thread: a
@@ -596,16 +740,35 @@ class AsyncServer(QueryFrontend):
     def ingest(self, embeddings: np.ndarray, doc_ids: np.ndarray,
                timeout: float = 120.0):
         """Enqueue one stream batch for background ingestion (bounded
-        queue: blocks the producer — never the query path — when full)."""
-        assert not self._closed, "server is closed"
+        queue: blocks the producer — never the query path — when full).
+
+        With durability armed the batch is journaled (appended + fsync'd)
+        BEFORE it is enqueued, under one producer lock, so journal
+        sequence order IS queue order — the property replay bit-identity
+        rests on. The ``ingest.enqueue`` fault point fires before the
+        journal append: a producer-side failure means the batch was never
+        acknowledged durable, so nothing is ever silently lost."""
+        if self._closed:
+            raise RuntimeError(
+                "server is closed: ingest() after close() would never "
+                "be applied")
+        self._check()
+        x = np.asarray(embeddings)
         ids = np.asarray(doc_ids)
         tr = obs.tracer()
-        if tr is not None:
-            with tr.span("ingest.enqueue", cat="ingest",
-                         batch=int(ids.size)):
-                self._put((np.asarray(embeddings), ids), timeout)
-        else:
-            self._put((np.asarray(embeddings), ids), timeout)
+        span = (tr.span("ingest.enqueue", cat="ingest", batch=int(ids.size))
+                if tr is not None else None)
+        with self._ingest_lock:
+            faults.fault_point("ingest.enqueue")
+            if self._durable is not None:
+                seq = self._durable.record(x, ids)
+            else:
+                seq = self._next_seq
+                self._next_seq += 1
+            self._put((seq, x, ids), timeout)
+        if span is not None:
+            span.args["seq"] = seq
+            span.end()
         # count live rows only (doc_id < 0 is the dead/padding sentinel),
         # mirroring _docs_ingested so freshness lag can actually reach 0
         live = int(np.sum(ids >= 0))
@@ -615,6 +778,25 @@ class AsyncServer(QueryFrontend):
         if reg is not None:
             reg.counter("ingest_docs_enqueued_total").inc(live)
             reg.gauge("ingest_queue_depth").set(self._queue.qsize())
+
+    def submit(self, query) -> int:
+        """Queue one query. Raises eagerly — a clear RuntimeError after
+        ``close()`` (a post-close submission could never be answered)
+        and the stored ingest-thread error (with its batch seq) instead
+        of letting a doomed ticket queue up."""
+        if self._closed:
+            raise RuntimeError(
+                "server is closed: submit() after close() would never "
+                "be answered")
+        self._check()
+        return super().submit(query)
+
+    def flush(self) -> list[dict]:
+        # surface a dead ingest thread on the next flush too — not just
+        # lazily from sync()/close() — so callers polling the query path
+        # learn about the failed batch immediately
+        self._check()
+        return super().flush()
 
     def _query_batch(self, q: np.ndarray, plan=None):
         self._check()
@@ -795,6 +977,8 @@ class AsyncServer(QueryFrontend):
         if self._thread.is_alive():
             raise TimeoutError("ingest thread did not stop in time")
         self._closed = True
+        if self._durable is not None:
+            self._durable.close()
         self._check()
 
     def __enter__(self):
@@ -812,6 +996,35 @@ class AsyncServer(QueryFrontend):
         base = self.engine.state_memory_bytes()
         return base + (self._hotset.pinned_bytes
                        if self._hotset is not None else 0)
+
+    def robustness_stats(self) -> dict:
+        """Supervision + durability accounting. The schema is CONSTANT
+        whether or not durability is armed (zeros / None / empty when
+        disabled) and at every point of the server lifecycle."""
+        out = {
+            "restarts": self.restarts,
+            "max_restarts": self.max_restarts,
+            "quarantined": list(self.quarantined),
+            "error_seq": self._error_seq,
+            "durable": self._durable is not None,
+            "recovery": self.recovery_report,
+            "journal_last_seq": -1,
+            "journal_segments": 0,
+            "journal_disk_bytes": 0,
+            "journal_lag_batches": 0,
+            "checkpoint_seq": None,
+            "checkpoint_age_batches": 0,
+            "checkpoint_saves": {"full": 0, "delta": 0, "failed": 0},
+            "checkpoint_bytes": {"full": 0, "delta": 0},
+        }
+        if self._durable is not None:
+            s = self._durable.stats()
+            for key in ("journal_last_seq", "journal_segments",
+                        "journal_disk_bytes", "journal_lag_batches",
+                        "checkpoint_seq", "checkpoint_age_batches",
+                        "checkpoint_saves", "checkpoint_bytes"):
+                out[key] = s[key]
+        return out
 
     def freshness_stats(self) -> dict:
         """How far the published snapshot trails the ingested stream —

@@ -44,6 +44,51 @@ def _key_of(path) -> str:
     return jax.tree_util.keystr(path)
 
 
+def flatten_tree(tree) -> dict[str, Any]:
+    """Public alias: {keystr path: leaf}, typed PRNG keys unwrapped to
+    their raw key data (shared with ``serve.durability``)."""
+    return _flatten(tree)
+
+
+def unflatten_arrays(abstract_tree, arrays: dict[str, Any]):
+    """Rebuild ``abstract_tree``'s structure from a {keystr path: np
+    array} dict: typed PRNG keys re-wrapped, dtypes restored from the
+    abstract leaves. The restore half of :func:`flatten_tree`."""
+    paths = jax.tree_util.tree_flatten_with_path(abstract_tree)[0]
+    leaves = []
+    for path, leaf in paths:
+        key = _key_of(path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing {key}")
+        if _is_key(leaf):
+            arr = jax.random.wrap_key_data(jax.numpy.asarray(arrays[key]))
+        else:
+            arr = arrays[key].astype(leaf.dtype) if hasattr(leaf, "dtype") \
+                else arrays[key]
+        leaves.append(arr)
+    treedef = jax.tree_util.tree_structure(abstract_tree)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def fsync_path(path: str) -> None:
+    """fsync a written file so a post-crash recovery can trust it (best
+    effort: platforms without dir/file fsync just proceed)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+    except OSError:
+        pass
+
+
+def fsync_dir(path: str) -> None:
+    """fsync a directory entry (the rename itself must be durable, not
+    just the renamed files)."""
+    fsync_path(path)
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep_n: int = 3):
         self.dir = directory
@@ -119,21 +164,7 @@ class CheckpointManager:
         z = np.load(os.path.join(d, "arrays.npz"))
         arrays = {k.replace("╱", "/"): z[k] for k in z.files}
 
-        paths = jax.tree_util.tree_flatten_with_path(abstract_tree)[0]
-        flat_shard = (jax.tree_util.tree_flatten_with_path(shardings)[0]
-                      if shardings is not None else None)
-        leaves = []
-        for i, (path, leaf) in enumerate(paths):
-            key = _key_of(path)
-            if key not in arrays:
-                raise KeyError(f"checkpoint missing {key}")
-            if _is_key(leaf):  # re-wrap raw key data as a typed PRNG key
-                arr = jax.random.wrap_key_data(jax.numpy.asarray(arrays[key]))
-            else:
-                arr = arrays[key].astype(leaf.dtype) if hasattr(leaf, "dtype") \
-                    else arrays[key]
-            if flat_shard is not None:
-                arr = jax.device_put(arr, flat_shard[i][1])
-            leaves.append(arr)
-        treedef = jax.tree_util.tree_structure(abstract_tree)
-        return jax.tree_util.tree_unflatten(treedef, leaves), meta
+        tree = unflatten_arrays(abstract_tree, arrays)
+        if shardings is not None:
+            tree = jax.tree_util.tree_map(jax.device_put, tree, shardings)
+        return tree, meta

@@ -299,3 +299,48 @@ def test_dead_rows_are_inert_for_retrieval_state():
     assert int(s_pad.kept) == int(s_plain.kept)
     assert int(s_pad.hh.total_seen) == int(s_plain.hh.total_seen)
     assert not bool(np.any(np.asarray(info["keep"])[-2:]))
+
+
+def test_drain_racing_concurrent_submit_answers_exactly_once():
+    """The shutdown lifecycle path: ``drain()`` racing concurrent
+    ``submit()`` threads. Every ticket that submit() ever returned is
+    answered EXACTLY once across the racing drains plus one final sweep
+    — no stranded queries, no duplicates, no invented tickets."""
+    cfg = small_cfg(store_depth=4)
+    stream = make_stream("iot", dim=DIM)
+    server = AsyncServer(
+        cfg, ServerConfig(max_batch=4, max_wait_ms=0.0, topk=5,
+                          two_stage=True, nprobe=4),
+        key=jax.random.key(3), publish_every=2, queue_max=4)
+    server.ingest(stream.next_batch(64)["embedding"],
+                  stream.next_batch(64)["doc_id"])
+    server.sync()
+
+    tickets: list[int] = []
+    tlock = threading.Lock()
+
+    def submitter(seed: int):
+        rng = np.random.default_rng(seed)
+        for qv in stream.queries(30)["embedding"]:
+            t = server.submit(qv)
+            with tlock:
+                tickets.append(t)
+            if rng.random() < 0.2:
+                time.sleep(0.0005)   # jitter the interleaving
+
+    threads = [threading.Thread(target=submitter, args=(i,))
+               for i in range(3)]
+    for th in threads:
+        th.start()
+    answers = []
+    while any(th.is_alive() for th in threads):  # drain DURING shutdown
+        answers += server.drain()
+    for th in threads:
+        th.join()
+    answers += server.drain()        # final sweep: nothing left stranded
+
+    got = sorted(a["ticket"] for a in answers)
+    assert got == sorted(tickets)            # exactly once, none stranded
+    assert len(got) == len(set(got)) == 90
+    assert not server._pending
+    server.close()
